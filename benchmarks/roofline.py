@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable)."""
+
+from __future__ import annotations
+
+from repro.utils.roofline import load_rows
+
+
+def render(rows, title="Roofline (per device, TPU v5e constants)"):
+    print(f"\n== {title} ==")
+    hdr = (f"{'arch':24s} {'shape':11s} {'mesh':8s} {'compute':>9s} "
+           f"{'memory':>9s} {'coll':>9s} {'dcn':>9s} {'bound':>10s} "
+           f"{'useful':>7s} {'mfu≤':>6s} {'tempGB':>7s}")
+    print(hdr)
+    out = []
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh)):
+        if r.status != "ok":
+            print(f"{r.arch:24s} {r.shape:11s} {r.mesh:8s} "
+                  f"SKIP: {r.reason}")
+            out.append((f"roofline/{r.arch}/{r.shape}/{r.mesh}", 0.0,
+                        f"skip: {r.reason}"))
+            continue
+        print(f"{r.arch:24s} {r.shape:11s} {r.mesh:8s} "
+              f"{r.compute_s:9.4f} {r.memory_s:9.4f} "
+              f"{r.collective_s:9.4f} {r.dcn_s:9.4f} "
+              f"{r.dominant:>10s} {r.useful_ratio:7.2f} "
+              f"{r.mfu_bound:6.2f} {r.temp_gb:7.1f}")
+        out.append((f"roofline/{r.arch}/{r.shape}/{r.mesh}/mfu_bound",
+                    r.mfu_bound, f"dominant={r.dominant}"))
+    return out
+
+
+def run_all():
+    rows = load_rows()
+    if not rows:
+        print("\n== Roofline: no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all` first ==")
+        return [("roofline/missing", 0.0, "no artifacts")]
+    return render(rows)
+
+
+if __name__ == "__main__":
+    run_all()

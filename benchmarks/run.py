@@ -1,0 +1,23 @@
+"""Benchmark aggregator: one section per paper table/figure + the roofline
+table.  Prints ``name,value,derived`` CSV at the end (harness contract)."""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import microbench, paper_figs, roofline
+    rows = []
+    rows += paper_figs.run_all()
+    rows += microbench.run_all()
+    rows += roofline.run_all()
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving example (deliverable (b)): continuous batching over a
+slot-based decode engine with a shared static cache.
+
+::
+
+    PYTHONPATH=src python examples/serve_llm.py --arch minicpm3-4b
+"""
+
+import argparse
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-32b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+    serve_cli.main([
+        "--arch", args.arch, "--preset", "tiny",
+        "--requests", str(args.requests), "--max-new", str(args.max_new),
+    ])
+
+
+if __name__ == "__main__":
+    main()

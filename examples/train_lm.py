@@ -1,0 +1,42 @@
+"""End-to-end LM training driver (deliverable (b)): train a ~100M-param
+model for a few hundred steps with the full production stack — synthetic
+deterministic data, AdamW + cosine schedule, grad accumulation, async
+checkpointing, fault-tolerant loop.
+
+CPU demo (a ~5M model, a couple of minutes)::
+
+    PYTHONPATH=src python examples/train_lm.py --steps 40
+
+The real thing (same code path; ~100M params, a few hundred steps)::
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300 \
+        --batch 32 --seq 512
+"""
+
+import argparse
+import sys
+
+sys.argv0 = sys.argv[0]
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    train_cli.main([
+        "--arch", args.arch, "--preset", args.preset,
+        "--steps", str(args.steps), "--batch", str(args.batch),
+        "--seq", str(args.seq), "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+    ])
+
+
+if __name__ == "__main__":
+    main()

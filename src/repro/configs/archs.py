@@ -1,0 +1,14 @@
+"""Import-all module: registers every assigned architecture config."""
+
+from repro.configs import (  # noqa: F401
+    gemma3_4b,
+    gemma_7b,
+    hubert_xlarge,
+    hymba_1p5b,
+    internvl2_26b,
+    llama4_scout,
+    mamba2_2p7b,
+    minicpm3_4b,
+    olmoe_1b_7b,
+    qwen15_32b,
+)

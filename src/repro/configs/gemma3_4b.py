@@ -1,0 +1,26 @@
+"""Gemma3-4B — dense transformer with 5:1 local:global attention, 128k.
+
+34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144, sliding window 1024
+on local layers, global layers use rope_theta=1e6 [hf:google/gemma-3-*-pt].
+The 5:1 interleave makes the arch sub-quadratic enough for long_500k decode
+(global layers are linear-in-cache at decode).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=10240,
+    vocab=262144,
+    head_dim=256,
+    mlp_kind="geglu",
+    tie_embeddings=True,
+    local_window=1024,
+    local_global_pattern=(5, 1),
+    rope_theta=1e4,
+))

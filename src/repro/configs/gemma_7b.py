@@ -1,0 +1,21 @@
+"""Gemma-7B — dense transformer, GeGLU, head_dim=256, tied embeddings.
+
+28L d_model=3072 16H (kv=16) d_ff=24576 vocab=256000 [arXiv:2403.08295].
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=24576,
+    vocab=256000,
+    head_dim=256,
+    mlp_kind="geglu",
+    tie_embeddings=True,
+    rope_theta=1e4,
+))

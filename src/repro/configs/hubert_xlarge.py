@@ -1,0 +1,24 @@
+"""HuBERT-XLarge — encoder-only audio transformer (w2v2 architecture).
+
+48L d_model=1280 16H d_ff=5120 vocab=504 (codebook targets)
+[arXiv:2106.07447].  The waveform frontend (conv feature extractor) is a
+STUB per the assignment spec: ``input_specs()`` provides precomputed frame
+features (dim 512) which the model projects to d_model.  Encoder-only ⇒ no
+decode shapes.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    mlp_kind="gelu",
+    frontend_dim=512,
+))

@@ -1,0 +1,29 @@
+"""Hymba-1.5B — hybrid: parallel attention + Mamba heads in every block.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16
+[arXiv:2411.13676].  Sliding-window attention everywhere except three
+full-attention layers (first/middle/last); meta tokens are not modeled
+(DESIGN.md §Arch-applicability).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    ssm=True,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    local_window=1024,
+    global_layers=(0, 15, 31),
+    mlp_kind="swiglu",
+))

@@ -1,0 +1,24 @@
+"""InternVL2-26B — VLM: InternViT frontend (stubbed) + InternLM2 backbone.
+
+Backbone: 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553
+[arXiv:2404.16821].  Per the assignment spec the modality frontend is a
+STUB: ``input_specs()`` provides precomputed patch embeddings (256 tokens
+at ViT hidden 3200, projected in-model to d_model).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    mlp_kind="swiglu",
+    rope_theta=1e6,
+    img_tokens=256,
+    frontend_dim=3200,
+))

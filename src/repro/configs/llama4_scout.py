@@ -1,0 +1,27 @@
+"""Llama-4-Scout-17B-16E — MoE transformer (16 experts, top-1 + shared).
+
+48L d_model=5120 40H (GQA kv=8) expert d_ff=8192 vocab=202048, every layer
+MoE with one always-on shared expert [hf:meta-llama/Llama-4-Scout-17B-16E].
+Treated as full-attention for shape-skip purposes (the chunked-attention
+variant is not modeled), see DESIGN.md §Arch-applicability.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    moe=True,
+    n_experts=16,
+    top_k=1,
+    expert_d_ff=8192,
+    n_shared_experts=1,
+    mlp_kind="swiglu",
+    rope_theta=5e5,
+))

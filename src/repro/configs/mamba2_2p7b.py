@@ -1,0 +1,25 @@
+"""Mamba2-2.7B — attention-free SSM (state-space duality / SSD).
+
+64L d_model=2560 vocab=50280, d_inner=2×d, headdim=64 (→ 80 SSM heads),
+state=128, conv width 4, 1 B/C group [arXiv:2405.21060].
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm=True,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    mlp_kind="none",
+))

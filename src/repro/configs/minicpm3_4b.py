@@ -1,0 +1,27 @@
+"""MiniCPM3-4B — dense MLA transformer.
+
+62L d_model=2560 40H (GQA kv=40) d_ff=6400 vocab=73448, MLA attention
+[hf:openbmb/MiniCPM3-4B].  MLA ranks follow the HF config: q_lora 768,
+kv_lora 256, qk_nope 64, qk_rope 32, v_head 64.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab=73448,
+    mla=True,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    mlp_kind="swiglu",
+    rope_theta=1e4,
+))

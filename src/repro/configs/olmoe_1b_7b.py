@@ -1,0 +1,24 @@
+"""OLMoE-1B-7B — MoE transformer (64 experts, top-8).
+
+16L d_model=2048 16H (kv=16) expert d_ff=1024 vocab=50304
+[arXiv:2409.02060].
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab=50304,
+    moe=True,
+    n_experts=64,
+    top_k=8,
+    expert_d_ff=1024,
+    mlp_kind="swiglu",
+    rope_theta=1e4,
+))

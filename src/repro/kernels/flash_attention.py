@@ -1,0 +1,107 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf): the dominant roofline
+term for the attention-heavy cells is HBM traffic from materialized
+(S × block_k) score tensors — ~6 passes over S²·H elements per layer.  This
+kernel keeps the running (max, denom, accumulator) and each score block in
+VMEM: HBM traffic collapses to the q/k/v/out tensors themselves.
+
+Grid: (batch·heads, q_blocks); the kv loop runs inside the kernel with
+online softmax.  Causal masking skips fully-masked kv blocks via the loop
+bound (the same data-driven-trip-count mechanism the GANAX conv kernel uses
+for its per-phase microprograms).  Validated against the pure-jnp oracle in
+interpret mode; ``ops`` wrapper falls back to the jnp path off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_k,
+               causal, sm_scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale       # (bq, d)
+    n_kv = seq_k // block_k
+    if causal:
+        # kv blocks strictly below the diagonal block are fully visible;
+        # the diagonal block needs masking; later blocks are skipped.
+        n_live = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k,
+                             n_kv)
+    else:
+        n_live = n_kv
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, block_q=512,
+                           block_k=512, interpret=False):
+    """q (B,S,H,hd), k/v (B,T,Hk,hd) with Hk == H (expand GQA first).
+
+    Returns (B,S,H,hd).  Forward only — pair with jax.checkpoint for
+    training (backward recomputes through the kernel).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    assert k.shape[2] == h, "expand GQA to MHA before the kernel"
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    # (B,S,H,d) → (B*H, S, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, t, dv)
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, seq_k=t,
+        causal=causal, sm_scale=d ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, t, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, t, dv), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dv), q.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dv).transpose(0, 2, 1, 3)

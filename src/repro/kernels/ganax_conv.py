@@ -1,0 +1,133 @@
+"""GANAX unified conv/tconv Pallas TPU kernel (MIMD-SIMD over phases).
+
+The kernel realizes the paper's architecture on TPU:
+
+* **Grid dimension over phases** = the MIMD axis.  Each phase is one
+  "microprogram": its tap count is *data-driven* (scalar-prefetched), so
+  different grid steps execute loops of different length — the unified
+  MIMD-SIMD execution at single-μop granularity.  A stride-1 convolution is
+  the degenerate single-phase case (pure SIMD mode), so discriminator convs
+  run through the *same* kernel with zero overhead — the paper's "without
+  compromising conventional convolution" property.
+* **Scalar prefetch tables** (`n_taps`, `tap_dy`, `tap_dx`) = the two-level
+  μop buffer: the grid's phase id is the global-μop index field; the SMEM
+  tables it selects are the local μop buffer contents.
+* **Decoupled access-execute**: `BlockSpec.index_map`s + the in-kernel
+  `pl.ds` offsets derived from the prefetched tables are the access
+  μ-engine (they drive the double-buffered HBM→VMEM DMA pipeline ahead of
+  compute — the paper's address FIFOs); the tap loop's MXU contractions are
+  the address-free execute μ-engine.
+* **Zero elimination**: the tap tables enumerate only consequential taps;
+  inserted zeros are never fetched nor multiplied.
+
+Layout contract (prepared by ``ops.py`` from the `PhaseSchedule`):
+
+  x_pad   (B, Hp, Wp, Cin)   input, uniformly padded for all phases
+  w_taps  (P, T, Cin, Cout)  per-phase gathered taps, zero-padded to T
+  n_taps  (P,)               consequential taps per phase
+  tap_dy / tap_dx (P, T)     input row/col offset per tap (≥ 0, into x_pad)
+  out     (B, P, Qy, Qx, Cout) phase-major output planes (interleaved into
+                              the final output by ops.py — a pure layout op)
+
+Tiling: grid = (B, P, Cout/bc, Cin/bk); the full (padded) spatial extent of
+one image is resident in VMEM per step (GAN feature maps are small: ≤ ~70²
+× 128-channel tile ≈ 1.2 MiB in f32).  The MXU contraction is
+(Qy·Qx, Cin)×(Cin, Cout) per tap; channel tiles are 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ganax_conv_kernel", "ganax_conv_pallas"]
+
+
+def ganax_conv_kernel(
+    # scalar-prefetch refs (SMEM)
+    n_taps_ref, tap_dy_ref, tap_dx_ref,
+    # tensor refs (VMEM blocks)
+    x_ref, w_ref, out_ref, acc_ref,
+    *, qy: int, qx: int, sy: int, sx: int, n_cin_tiles: int,
+):
+    """One grid step: (batch b, phase p, cout tile, cin tile)."""
+    ph = pl.program_id(1)
+    ci = pl.program_id(3)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n = n_taps_ref[ph]
+
+    def tap_body(t, _):
+        dy = tap_dy_ref[ph, t]
+        dx = tap_dx_ref[ph, t]
+        # Access engine: strided window starting at (dy, dx).  For plain
+        # strided convs (sy/sx > 1) the window is subsampled post-load.
+        xt = x_ref[0, pl.ds(dy, (qy - 1) * sy + 1),
+                   pl.ds(dx, (qx - 1) * sx + 1), :]
+        xt = xt[::sy, ::sx, :] if (sy > 1 or sx > 1) else xt
+        wt = w_ref[0, t]                       # (cin_t, cout_t)
+        # Execute engine: MXU contraction over the channel tile.
+        acc_ref[...] += jax.lax.dot_general(
+            xt.reshape(qy * qx, xt.shape[-1]), wt,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return ()
+
+    jax.lax.fori_loop(0, n, tap_body, (), unroll=False)
+
+    @pl.when(ci == n_cin_tiles - 1)
+    def _flush():
+        out_ref[0, 0] = acc_ref[...].reshape(qy, qx, -1).astype(out_ref.dtype)
+
+
+def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
+                      n_taps: jax.Array, tap_dy: jax.Array,
+                      tap_dx: jax.Array, out_strides: tuple[int, int],
+                      qy: int, qx: int,
+                      block_cin: int = 128, block_cout: int = 128,
+                      out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Invoke the unified kernel.  See module docstring for layout."""
+    b, hp, wp, cin = x_pad.shape
+    p, t, cin_w, cout = w_taps.shape
+    assert cin_w == cin, (cin_w, cin)
+    assert cin % block_cin == 0 and cout % block_cout == 0, \
+        (cin, cout, block_cin, block_cout)
+    n_ci = cin // block_cin
+    n_co = cout // block_cout
+    out_dtype = out_dtype or x_pad.dtype
+    sy, sx = out_strides
+
+    grid = (b, p, n_co, n_ci)
+    kernel = functools.partial(ganax_conv_kernel, qy=qy, qx=qx, sy=sy,
+                               sx=sx, n_cin_tiles=n_ci)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, block_cin),
+                         lambda bi, ph, co, ci, *_: (bi, 0, 0, ci)),
+            pl.BlockSpec((1, t, block_cin, block_cout),
+                         lambda bi, ph, co, ci, *_: (ph, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qy, qx, block_cout),
+                               lambda bi, ph, co, ci, *_: (bi, ph, 0, 0, co)),
+        scratch_shapes=[pltpu.VMEM((qy * qx, block_cout), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, p, qy, qx, cout), out_dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary",
+                                 "arbitrary"),
+        ),
+    )
+    return fn(n_taps, tap_dy, tap_dx, x_pad, w_taps)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the GANAX kernels.
+
+These are the ground truth the Pallas kernels are validated against in
+``tests/test_kernels.py`` (shape/dtype sweeps, interpret mode).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tconv import _dim_numbers, tconv_zero_insert
+
+__all__ = ["tconv_ref", "conv_ref"]
+
+
+def tconv_ref(x: jax.Array, w: jax.Array, strides: Sequence[int],
+              paddings: Sequence[int]) -> jax.Array:
+    """Transposed convolution oracle (channels-last, PyTorch geometry).
+
+    Implemented via the zero-insertion definition — deliberately the
+    *naive* formulation, independent from the polyphase code under test.
+    """
+    return tconv_zero_insert(x, w, strides, paddings)
+
+
+def conv_ref(x: jax.Array, w: jax.Array, strides: Sequence[int],
+             paddings: Sequence[int]) -> jax.Array:
+    """Plain (discriminator) convolution oracle: correlation, stride s,
+    symmetric padding p."""
+    nd = x.ndim - 2
+    pads = tuple((p, p) for p in paddings)
+    return lax.conv_general_dilated(
+        x, w, window_strides=tuple(strides), padding=pads,
+        dimension_numbers=_dim_numbers(nd),
+        preferred_element_type=jnp.float32).astype(x.dtype)

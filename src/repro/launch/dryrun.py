@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every supported (architecture × input shape) cell this lowers and
+compiles the step function on the production mesh (single-pod 16×16 and
+multi-pod 2×16×16), records ``memory_analysis()`` / ``cost_analysis()`` and
+the HLO-parsed roofline terms (FLOPs / HBM bytes / collective bytes with
+while-loop trip multipliers), and writes one JSON artifact per cell under
+``artifacts/dryrun/``.
+
+The two XLA_FLAGS lines above MUST stay the first statements in this file:
+jax locks the device count on first init.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, cell_supported, get_config, \
+    list_configs
+from repro.launch.mesh import POD_STRIDE, make_production_mesh
+from repro.launch.specs import build_cell
+from repro.utils.hlo import analyze_hlo
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save_hlo: bool = False, rules=None, flags=None,
+             variant: str = "", kv_dtype: str = "bf16") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    plan = build_cell(arch, shape, mesh, rules=rules, flags=flags,
+                      kv_dtype=kv_dtype)
+    with mesh:
+        lowered = plan.fn.lower(*plan.args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    parsed = analyze_hlo(hlo_text, pod_stride=POD_STRIDE if multi_pod
+                         else 1 << 62)
+
+    art = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "meta": plan.meta,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "xla_cost_analysis": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "hlo_parsed": parsed.to_json(),
+        "status": "ok",
+    }
+    if save_hlo:
+        hdir = os.path.join(ARTIFACT_DIR, "hlo")
+        os.makedirs(hdir, exist_ok=True)
+        with open(os.path.join(
+                hdir, f"{arch}_{shape}_{art['mesh']}.txt"), "w") as f:
+            f.write(hlo_text)
+    return art
+
+
+def artifact_path(arch: str, shape: str, mesh_name: str,
+                  variant: str = "") -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"_{variant}" if variant else ""
+    return os.path.join(ARTIFACT_DIR,
+                        f"{arch}_{shape}_{mesh_name}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_configs() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, why = cell_supported(cfg, SHAPES[shape])
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = artifact_path(arch, shape, mesh_name)
+                if not ok:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape,
+                                   "mesh": mesh_name, "status": "skipped",
+                                   "reason": why}, f, indent=1)
+                    print(f"[dryrun] SKIP {arch}×{shape}×{mesh_name}: {why}")
+                    continue
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] exists {arch}×{shape}×{mesh_name}")
+                    continue
+                cells.append((arch, shape, mp, path))
+
+    n_fail = 0
+    for arch, shape, mp, path in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        tag = f"{arch}×{shape}×{mesh_name}"
+        try:
+            art = run_cell(arch, shape, mp, save_hlo=args.save_hlo)
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            hp = art["hlo_parsed"]
+            print(f"[dryrun] OK   {tag}: compile={art['compile_s']}s "
+                  f"flops/dev={hp['flops']:.3e} "
+                  f"coll={sum(hp['collective_bytes'].values()):.3e}B "
+                  f"temp={art['memory_analysis']['temp_bytes']}")
+        except Exception as e:
+            n_fail += 1
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": str(e)[:2000]}, f,
+                          indent=1)
+            print(f"[dryrun] FAIL {tag}: {type(e).__name__}: "
+                  f"{str(e)[:300]}")
+            traceback.print_exc(limit=3)
+    print(f"[dryrun] done: {len(cells) - n_fail}/{len(cells)} compiled")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run must
+set ``XLA_FLAGS`` before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "POD_STRIDE"]
+
+# device-id stride between pods in the multi-pod mesh (pod axis is
+# slowest-varying): used to classify collectives as ICI vs DCN.
+POD_STRIDE = 256
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: 16×16 per pod, ×2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int | None = None):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    if data is None or model is None:
+        model = 1
+        data = n
+        for m in (4, 2):
+            if n % m == 0 and n >= m:
+                model = m
+                data = n // m
+                break
+    return jax.make_mesh((data, model), ("data", "model"))

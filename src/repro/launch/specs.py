@@ -1,0 +1,209 @@
+"""Per-cell (architecture × input shape) dry-run plans.
+
+``build_cell`` assembles everything needed to lower one cell on a mesh:
+the jitted step function, ``ShapeDtypeStruct`` stand-ins for every input
+(weak-type-correct, shardable, zero allocation) and the in/out shardings.
+
+Shape semantics (per the assignment):
+  * ``train_*``   → ``train_step`` (fwd+bwd+AdamW, grad-accum microbatches)
+  * ``prefill_*`` → ``prefill_step`` (full-sequence forward + cache build)
+  * ``decode_*`` / ``long_*`` → ``serve_step`` (ONE new token against a
+    seq_len-deep KV cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, ShapeSpec, SHAPES,
+                                cell_supported, get_config)
+from repro.models import transformer as tr
+from repro.models.common import spec_shapes
+from repro.sharding import rules as R
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_state import make_train_step
+
+__all__ = ["CellPlan", "build_cell", "GRAD_ACCUM"]
+
+# Grad-accumulation (microbatch) schedule per arch family for train_4k:
+# bigger models → more accumulation so the per-microbatch activation
+# footprint fits HBM (memory term, see EXPERIMENTS.md §Dry-run).
+GRAD_ACCUM: dict[str, int] = {
+    "qwen1.5-32b": 16,
+    "internvl2-26b": 16,
+    "llama4-scout-17b-a16e": 16,
+    "minicpm3-4b": 8,
+    "gemma-7b": 8,
+    "gemma3-4b": 8,
+    "mamba2-2.7b": 4,
+    "olmoe-1b-7b": 2,
+    "hubert-xlarge": 2,
+    "hymba-1.5b": 2,
+}
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    fn: Callable                      # jitted (in_shardings applied)
+    args: tuple                       # ShapeDtypeStructs
+    meta: dict
+
+
+def _batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, rules,
+                 grad_accum: int):
+    """ShapeDtypeStructs + shardings for the input batch."""
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        mb = gb // grad_accum
+        lead = (grad_accum, mb) if grad_accum > 1 else (mb,)
+        bdim = 1 if grad_accum > 1 else 0
+    else:
+        lead = (gb,)
+        bdim = 0
+
+    def tok_spec(extra=(), dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(lead + (s,) + extra, dtype)
+
+    def shard(ndim):
+        return R.batch_sharding(mesh, ndim, rules, batch_dim=bdim,
+                                batch_size=lead[bdim])
+
+    if cfg.family == "encoder":
+        batch = {
+            "features": tok_spec((cfg.frontend_dim,), jnp.float32),
+            "labels": tok_spec(),
+            "label_mask": tok_spec(dtype=jnp.float32),
+        }
+    else:
+        batch = {"tokens": tok_spec()}
+        if cfg.family == "vlm":
+            batch["img_embeds"] = jax.ShapeDtypeStruct(
+                lead + (cfg.img_tokens, cfg.frontend_dim), jnp.float32)
+    shardings = {k: shard(v.ndim) for k, v in batch.items()}
+    return batch, shardings
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               rules: R.Rules | None = None,
+               flags: tr.RunFlags | None = None,
+               donate: bool = True, kv_dtype: str = "bf16") -> CellPlan:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell {arch}×{shape_name} unsupported: {why}")
+    # training shards params FSDP-style over (data × model); serving keeps
+    # bf16 weights replicated across data replicas (no per-step gather).
+    rules = rules or R.Rules(allow_uneven=False,
+                             fsdp=(shape.kind == "train"))
+    long_ctx = shape.name.startswith("long")
+    flags = flags or tr.RunFlags(
+        attn_impl="flash", remat=True, mesh=mesh,
+        seq_shard_decode=long_ctx and cfg.family != "ssm")
+
+    axes = tr.model_axes(cfg)
+    shapes = spec_shapes(tr.model_specs(cfg))
+    if shape.kind != "train":   # serving weights in bf16
+        shapes = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(
+                sd.shape, jnp.bfloat16 if sd.dtype == jnp.float32
+                else sd.dtype), shapes)
+    p_sh = R.param_shardings(mesh, axes, shapes, rules)
+
+    # 6·N per token for training (fwd+bwd), 2·N for forward-only serving
+    flops_tok = tr.model_flops_per_token(cfg)
+    if shape.kind != "train":
+        flops_tok /= 3.0
+    meta = {"arch": arch, "shape": shape_name,
+            "params": tr.count_params(cfg),
+            "model_flops_per_token": flops_tok,
+            "mesh": dict(mesh.shape)}
+
+    if shape.kind == "train":
+        accum = GRAD_ACCUM.get(arch, 4)
+        # the microbatch must still cover the batch mesh axes, or whole
+        # pods silently replicate work (caught by the multi-pod roofline:
+        # per-device terms failed to halve)
+        bs_prod = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                               if a in mesh.shape]))
+        accum = max(1, min(accum, shape.global_batch // bs_prod))
+        batch, b_sh = _batch_specs(cfg, shape, mesh, rules, accum)
+        opt_cfg = AdamWConfig(total_steps=10_000)
+        # compute copy: TP-only sharding (FSDP gather hoisted out of the
+        # accumulation loop, §Perf HC5); master grads reduce-scattered
+        # back to the FSDP layout before AdamW
+        nofsdp = dataclasses.replace(rules, fsdp=False)
+        c_sh = R.param_shardings(mesh, axes, shapes, nofsdp)
+        step_fn = make_train_step(cfg, opt_cfg, flags, grad_accum=accum,
+                                  compute_shardings=c_sh,
+                                  master_shardings=p_sh)
+        o_sh = R.opt_state_shardings(mesh, axes, shapes, rules)
+        state_specs = {
+            "params": shapes,
+            "opt": {"mu": shapes, "nu": shapes,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        # fp32 moments
+        state_specs["opt"]["mu"] = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.float32), shapes)
+        state_specs["opt"]["nu"] = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.float32), shapes)
+        scalar_sh = NamedSharding(mesh, P())
+        state_sh = {
+            "params": p_sh,
+            "opt": {"mu": o_sh, "nu": o_sh, "count": scalar_sh},
+            "step": scalar_sh,
+        }
+        fn = jax.jit(step_fn, in_shardings=(state_sh, b_sh),
+                     donate_argnums=(0,) if donate else ())
+        meta["grad_accum"] = accum
+        meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+        return CellPlan(arch, shape_name, fn, (state_specs, batch), meta)
+
+    if shape.kind == "prefill":
+        batch, b_sh = _batch_specs(cfg, shape, mesh, rules, 1)
+
+        def prefill_step(params, batch):
+            logits, cache, _ = tr.forward(params, batch, cfg,
+                                          mode="prefill", flags=flags,
+                                          last_logit_only=True)
+            return logits[:, -1], cache
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+        return CellPlan(arch, shape_name, fn, (shapes, batch), meta)
+
+    # decode
+    gb, s = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: tr.init_cache(cfg, gb, s, kv_dtype=kv_dtype))
+    seq_shard = bool(flags.seq_shard_decode)
+    c_sh = R.cache_shardings(mesh, cache_shapes, rules,
+                             seq_shard=seq_shard)
+    tok = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+    lens = jax.ShapeDtypeStruct((gb,), jnp.int32)
+    tok_sh = R.batch_sharding(mesh, 2, rules, batch_size=gb) \
+        if not seq_shard else NamedSharding(mesh, P())
+    len_sh = R.batch_sharding(mesh, 1, rules, batch_size=gb) \
+        if not seq_shard else NamedSharding(mesh, P())
+
+    def serve_step(params, cache, tokens, lengths):
+        return tr.decode_step(params, cache, tokens, lengths, cfg, flags)
+
+    fn = jax.jit(serve_step, in_shardings=(p_sh, c_sh, tok_sh, len_sh),
+                 donate_argnums=(1,) if donate else ())
+    meta["tokens_per_step"] = gb
+    meta["cache_len"] = s
+    meta["seq_shard"] = seq_shard
+    return CellPlan(arch, shape_name, fn, (shapes, cache_shapes, tok, lens),
+                    meta)

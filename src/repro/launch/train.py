@@ -1,0 +1,109 @@
+"""Training launcher.
+
+CPU-sized presets run out of the box; the full assigned configs are the
+same code path on a real mesh (see ``launch/dryrun.py`` for the compile
+proof).  Examples::
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+        --preset tiny --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-7b \
+        --preset 100m --steps 300 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticLM, make_batch_fn
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as tr
+from repro.sharding import rules as R
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_state import init_train_state, make_train_step
+
+
+def reduced_config(arch: str, preset: str):
+    cfg = get_config(arch)
+    if preset == "full":
+        return cfg
+    if preset == "tiny":
+        over = dict(n_layers=2, d_model=128, d_ff=256, vocab=512)
+        heads = dict(n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2) or 2,
+                     head_dim=32)
+    elif preset == "100m":
+        over = dict(n_layers=12, d_model=768, d_ff=2048, vocab=32000)
+        heads = dict(n_heads=12, n_kv_heads=min(cfg.n_kv_heads, 4) or 4,
+                     head_dim=64)
+    else:
+        raise ValueError(preset)
+    if cfg.n_heads:
+        over.update(heads)
+    if cfg.mla:
+        over.update(q_lora_rank=over["d_model"] // 2,
+                    kv_lora_rank=over["d_model"] // 4,
+                    qk_nope_head_dim=32, qk_rope_head_dim=16,
+                    v_head_dim=32)
+    if cfg.moe:
+        over.update(n_experts=8, top_k=min(cfg.top_k, 2),
+                    expert_d_ff=over["d_ff"] // 4)
+    if cfg.ssm:
+        over.update(ssm_state=16, ssm_head_dim=32)
+    if cfg.local_window:
+        over.update(local_window=128)
+    if cfg.global_layers:
+        over.update(global_layers=(0, over["n_layers"] - 1))
+    if cfg.img_tokens:
+        over.update(img_tokens=16, frontend_dim=128)
+    if cfg.frontend_dim and not cfg.img_tokens:
+        over.update(frontend_dim=128)
+    return dataclasses.replace(cfg, **over)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="tiny",
+                    choices=["tiny", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch, args.preset)
+    mesh = make_local_mesh()
+    print(f"[train] arch={args.arch} preset={args.preset} "
+          f"params={tr.count_params(cfg):,} mesh={dict(mesh.shape)}")
+
+    opt_cfg = AdamWConfig(peak_lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps)
+    flags = tr.RunFlags(attn_impl="flash", remat=True, mesh=mesh)
+    step_fn = make_train_step(cfg, opt_cfg, flags,
+                              grad_accum=args.grad_accum)
+    rules = R.Rules()
+    with mesh:
+        state = init_train_state(cfg, jax.random.PRNGKey(args.seed))
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        src = SyntheticLM(cfg, args.batch, args.seq, seed=args.seed,
+                          microbatches=args.grad_accum)
+        batch_fn = make_batch_fn(src)
+        loop = TrainLoop(
+            LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, log_every=1),
+            jit_step, batch_fn, state)
+        loop.run()
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

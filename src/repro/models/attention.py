@@ -1,0 +1,568 @@
+"""Attention: GQA/MQA/MHA, MLA (MiniCPM3), sliding-window, flash, decode.
+
+Implementations:
+
+* ``flash_attention`` — blocked online-softmax over KV blocks via
+  ``lax.scan``: O(S·bk) live memory instead of O(S²); the default for
+  training and prefill.
+* ``swa_attention`` — *exact* sliding-window attention via the block-local
+  trick (each query block attends to itself + the previous block; exact for
+  window ≤ block).  FLOPs scale as O(S·2w), not O(S²) — this is what makes
+  gemma3/hymba sub-quadratic.
+* ``decode_attention`` — single-token attention over a full cache with a
+  length mask (S_q = 1, memory-trivial).
+* ``flash_decode`` — shard_map'd decode attention over a KV cache whose
+  *sequence* dimension is sharded over the ``data`` mesh axis (used for
+  long_500k, where batch=1 would otherwise idle the data axis): local
+  partial (max, num, den) + psum combine.
+* ``mla_*`` — multi-head latent attention: low-rank Q/KV compression with
+  decoupled RoPE; the decode path attends in latent space (absorbed
+  projections) so the cache is (kv_lora + rope_dim) per token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockDesc
+from repro.models.common import PSpec, apply_rope, rms_norm, rope_angles
+
+__all__ = ["attention_specs", "attention_apply", "mla_specs", "mla_apply",
+           "flash_attention", "swa_attention", "decode_attention",
+           "flash_decode"]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core attention math.
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def constrain_bthd(x, mesh, batch_axes=("pod", "data"),
+                   uneven_heads: bool = False):
+    """Pin a (B, T, H, hd) activation's sharding: batch over the data axes,
+    heads over `model`.
+
+    Without this, GSPMD can resolve q-vs-cache sharding mismatches by
+    ALL-GATHERING the KV cache (observed: 346 GB of gathers per step on
+    qwen decode_32k) or by REPLICATING attention across the model axis
+    (observed: 3.4× FLOP inflation on qwen train_4k).
+
+    ``uneven_heads=True`` shards the head dim even when it doesn't divide
+    the axis — GSPMD pads (idle lanes on the tail shards, e.g. gemma3's
+    8 q-heads over 16 shards run at 50% attention occupancy), which is far
+    cheaper than replication and legal for intermediates (unlike jit
+    inputs, which must divide evenly — so decode CACHES use the even
+    head_dim sharding instead).
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    m = mesh.shape.get("model", 1)
+    b_ax = tuple(a for a in batch_axes if a in mesh.shape)
+    while b_ax and x.shape[0] % int(
+            __import__("numpy").prod([mesh.shape[a] for a in b_ax])) != 0:
+        b_ax = b_ax[1:]
+    if uneven_heads:
+        h_ax, hd_ax = "model", None
+    else:
+        h_ax = "model" if x.shape[2] % m == 0 else None
+        hd_ax = "model" if (h_ax is None and x.shape[3] % m == 0) else None
+    spec = P(b_ax if len(b_ax) > 1 else (b_ax[0] if b_ax else None),
+             None, h_ax, hd_ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def naive_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                    softcap=0.0):
+    """Reference full-matrix attention.  q (B,S,Hq,hd), k/v (B,T,Hk,hd)."""
+    b, s, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    rep = hq // hk
+    qg = q.reshape(b, s, hk, rep, hd)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores *= hd ** -0.5
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = _mask(q_pos, k_pos, causal=causal, window=window)  # (B,S,T)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs, v)
+    return out.reshape(b, s, hq, hv)
+
+
+def _mask(q_pos, k_pos, *, causal, window):
+    """(B,S,T) validity mask from absolute positions.
+
+    q_pos: (B,S) int32; k_pos: (B,T) or (T,).
+    """
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+    m = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    if causal:
+        m &= d >= 0
+    if window > 0:
+        m &= d < window
+    m &= k_pos[:, None, :] >= 0  # negative k_pos marks padding
+    return m
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                    softcap=0.0, block_k=1024):
+    """Blocked online-softmax attention (scan over KV blocks)."""
+    b, s, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    rep = hq // hk
+    if t <= block_k:
+        return naive_attention(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, softcap=softcap)
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (b, t))
+    nb = -(-t // block_k)
+    pad = nb * block_k - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kb = k.reshape(b, nb, block_k, hk, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block_k, hk, hv).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(b, nb, block_k).transpose(1, 0, 2)
+    qg = q.reshape(b, s, hk, rep, hd)
+    scale = hd ** -0.5
+
+    m0 = jnp.full((b, hk, rep, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, rep, s), jnp.float32)
+    a0 = jnp.zeros((b, hk, rep, s, hv), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kk, vv, pp = blk
+        sc = jnp.einsum("bsgrh,btgh->bgrst", qg, kk,
+                        preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            sc = softcap * jnp.tanh(sc / softcap)
+        msk = _mask(q_pos, pp, causal=causal, window=window)
+        sc = jnp.where(msk[:, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bgrst,btgh->bgrsh", p.astype(vv.dtype), vv,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, hv).astype(q.dtype)
+
+
+def chunked_q_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                        softcap=0.0, block_q=1024):
+    """Full-row attention computed one q-block at a time (scan).
+
+    Peak live score memory drops from O(S·block_k)·n_live_blocks to
+    O(block_q·T) per layer — the CPU-verifiable mitigation for prefill
+    temp blow-ups (the Pallas flash kernel is the full fix on TPU; see
+    kernels/flash_attention.py and EXPERIMENTS.md §Perf HC4)."""
+    b, s, hq, hd = q.shape
+    if s <= block_q:
+        return naive_attention(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, softcap=softcap)
+    nb = -(-s // block_q)
+    pad = nb * block_q - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+    qb = q.reshape(b, nb, block_q, hq, hd).swapaxes(0, 1)
+    pb = q_pos.reshape(b, nb, block_q).swapaxes(0, 1)
+
+    def body(_, blk):
+        qi, pi = blk
+        o = naive_attention(qi, k, v, pi, k_pos, causal=causal,
+                            window=window, softcap=softcap)
+        return (), o
+
+    _, ob = lax.scan(body, (), (qb, pb))
+    out = ob.swapaxes(0, 1).reshape(b, nb * block_q, hq, -1)
+    return out[:, :s]
+
+
+def swa_attention(q, k, v, q_pos, k_pos, *, window, softcap=0.0):
+    """Exact causal sliding-window attention, block-local formulation.
+
+    FLOPs O(S·2w).  Requires identical q/k lengths (train & prefill).
+    """
+    b, s, hq, hd = q.shape
+    hk = k.shape[2]
+    rep = hq // hk
+    w = window
+    if s <= 2 * w:  # not worth blocking
+        return naive_attention(q, k, v, q_pos, k_pos, causal=True,
+                               window=window, softcap=softcap)
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, nb, w, hk, rep, hd)
+    kb = k.reshape(b, nb, w, hk, hd)
+    vb = v.reshape(b, nb, w, hk, hd)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kc = jnp.concatenate([k_prev, kb], axis=2)  # (b, nb, 2w, hk, hd)
+    vc = jnp.concatenate([v_prev, vb], axis=2)
+    sc = jnp.einsum("bnigrh,bnjgh->bngrij", qb, kc,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    i = jnp.arange(w)[:, None]
+    j = jnp.arange(2 * w)[None, :]
+    delta = i + w - j            # q_abs - k_abs
+    rel_ok = (delta >= 0) & (delta < w)
+    first_blk = (jnp.arange(nb) == 0)[:, None, None]
+    from_prev = (j < w)[None, :, :] * jnp.ones((nb, w, 2 * w), bool)
+    valid = rel_ok[None] & ~(first_blk & from_prev)
+    # mask padded queries/keys at the tail
+    qi_abs = jnp.arange(nb)[:, None] * w + jnp.arange(w)[None, :]
+    kj_abs = (jnp.arange(nb)[:, None] - 1) * w + jnp.arange(2 * w)[None, :]
+    valid = (valid & (qi_abs[:, :, None] < s) & (kj_abs[:, None, :] < s)
+             & (kj_abs[:, None, :] >= 0))
+    sc = jnp.where(valid[None, :, None, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(vc.dtype)
+    out = jnp.einsum("bngrij,bnjgh->bnigrh", pr, vc)
+    out = out.reshape(b, nb * w, hq, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=0, softcap=0.0):
+    """One-token attention over a static-size cache.
+
+    q: (B,1,Hq,hd); caches (B,T,Hk,hd); lengths (B,) = index of the current
+    token (cache already contains it at position ``lengths``).
+    """
+    b, _, hq, hd = q.shape
+    t, hk = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hk
+    qg = q.reshape(b, 1, hk, rep, hd)
+    sc = jnp.einsum("bsgrh,btgh->bgrst", qg, k_cache,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    if softcap > 0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    kpos = jnp.arange(t)[None]
+    ok = kpos <= lengths[:, None]
+    if window > 0:
+        ok &= kpos > (lengths[:, None] - window)
+    sc = jnp.where(ok[:, None, None, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", pr, v_cache)
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, mesh, seq_axis="data",
+                 window=0):
+    """Decode attention with the cache sequence dim sharded over the mesh.
+
+    Implements flash-decoding: each shard computes a partial
+    (max, numerator, denominator) over its cache slice; the partials are
+    combined with psum after renormalizing — two tiny collectives instead
+    of gathering a 500k-token cache.
+    """
+    b, _, hq, hd = q.shape
+    t, hk = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hk
+    n_shards = mesh.shape[seq_axis]
+
+    def local(qv, kc, vc, ln):
+        shard = lax.axis_index(seq_axis)
+        t_loc = kc.shape[1]
+        qg = qv.reshape(b, 1, hk, rep, hd)
+        sc = jnp.einsum("bsgrh,btgh->bgrst", qg, kc,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+        kpos = shard * t_loc + jnp.arange(t_loc)[None]
+        ok = kpos <= ln[:, None]
+        if window > 0:
+            ok &= kpos > (ln[:, None] - window)
+        sc = jnp.where(ok[:, None, None, None], sc, NEG_INF)
+        m = sc.max(axis=-1)                     # (b,hk,rep,1)
+        p = jnp.exp(sc - m[..., None])
+        den = p.sum(axis=-1)
+        num = jnp.einsum("bgrst,btgh->bgrsh", p.astype(vc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+        m_g = lax.pmax(m, seq_axis)
+        corr = jnp.exp(m - m_g)
+        den_g = lax.psum(den * corr, seq_axis)
+        num_g = lax.psum(num * corr[..., None], seq_axis)
+        out = num_g / jnp.maximum(den_g, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, hd)
+
+    from jax import shard_map
+    fd = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, seq_axis, None, None),
+                  P(None, seq_axis, None, None), P()),
+        out_specs=P(),
+        check_vma=False)
+    return fd(q, k_cache, v_cache, lengths).astype(q.dtype)
+
+
+def _pad_heads_even(q, k, v, hq, hk, mesh):
+    """Expand GQA→MHA and zero-pad heads so they divide the model axis."""
+    m = mesh.shape.get("model", 1) if mesh is not None else 1
+    if m <= 1 or (hq % m == 0 and hk % m == 0 and hq == hk):
+        if hq % m == 0 and hk % m == 0:
+            return q, k, v, hq, hk
+    rep = hq // hk
+    if rep > 1 and (hk % m or hq % m):
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        hk = hq
+    hpad = -(-hq // m) * m
+    if hpad != hq:
+        pad = [(0, 0), (0, 0), (0, hpad - hq), (0, 0)]
+        q = jnp.pad(q, pad)
+        if hk == hq:
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+            hk = hpad
+        hq = hpad
+    return q, k, v, hq, hk
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + cache).
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ArchConfig, desc: BlockDesc) -> dict[str, PSpec]:
+    d, hq, hk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    specs = {
+        "wq": PSpec((d, hq * hd), ("embed", "heads")),
+        "wk": PSpec((d, hk * hd), ("embed", "kv_heads")),
+        "wv": PSpec((d, hk * hd), ("embed", "kv_heads")),
+        "wo": PSpec((hq * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = PSpec((hq * hd,), ("heads",), init="zeros")
+        specs["bk"] = PSpec((hk * hd,), ("kv_heads",), init="zeros")
+        specs["bv"] = PSpec((hk * hd,), ("kv_heads",), init="zeros")
+    return specs
+
+
+def attention_apply(params, x, cfg: ArchConfig, desc: BlockDesc, *,
+                    positions, mode: str = "train", cache=None,
+                    lengths=None, mesh=None, seq_shard=False,
+                    attn_impl: str = "flash"):
+    """Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hq, hk = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = _split_heads(q, hq, hd)
+    k = _split_heads(k, hk, hd)
+    v = _split_heads(v, hk, hd)
+    cos, sin = rope_angles(positions, hd, desc.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    hq_real = hq
+    k_real, v_real = k, v   # cache stores the un-padded GQA heads
+    if mode == "decode" and not seq_shard:
+        # even shardings only: the cache is a jit input
+        q = constrain_bthd(q, mesh)
+        k = constrain_bthd(k, mesh)
+        v = constrain_bthd(v, mesh)
+    elif mode in ("train", "prefill") and not seq_shard:
+        # HC1 (EXPERIMENTS.md §Perf): when heads don't divide the model
+        # axis, GSPMD either replicates attention (3.4× FLOPs) or triggers
+        # "involuntary full rematerialization" resharding storms (34 s of
+        # collectives/step on gemma3 train_4k).  Fix: expand GQA→MHA and
+        # explicitly zero-pad heads to a multiple of the axis — even
+        # sharding end-to-end; padded heads are dead lanes sliced off
+        # after (≤2× attention-only FLOPs, −97% collective bytes).
+        q, k, v, hq, hk = _pad_heads_even(q, k, v, hq, hk, mesh)
+        q = constrain_bthd(q, mesh)
+        k = constrain_bthd(k, mesh)
+        v = constrain_bthd(v, mesh)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        k_pos = positions if positions.ndim == 2 else positions[None]
+        if desc.window and cfg.causal:
+            out = swa_attention(q, k, v, positions, k_pos,
+                                window=desc.window,
+                                softcap=cfg.logit_softcap)
+        elif attn_impl == "chunked_q":
+            out = chunked_q_attention(q, k, v, positions, k_pos,
+                                      causal=cfg.causal,
+                                      softcap=cfg.logit_softcap)
+        elif attn_impl == "flash":
+            out = flash_attention(q, k, v, positions, k_pos,
+                                  causal=cfg.causal,
+                                  softcap=cfg.logit_softcap)
+        else:
+            out = naive_attention(q, k, v, positions, k_pos,
+                                  causal=cfg.causal,
+                                  softcap=cfg.logit_softcap)
+        if mode == "prefill":
+            new_cache = {"k": k_real, "v": v_real}
+    elif mode == "decode":
+        # Write this token's k/v at per-sequence position `lengths`.
+        def write(c, new, ndim3=True):
+            def upd(cb, nb, ln):
+                start = (ln,) + (0,) * (cb.ndim - 1)
+                return lax.dynamic_update_slice(cb, nb, start)
+            return jax.vmap(upd)(c, new, lengths)
+
+        if "k_s" in cache:
+            # int8 KV cache (HC2): per-token scales (a per-head scale
+            # tensor would be model-axis-replicated when heads don't
+            # divide the axis — measured +5 GB/device on qwen decode);
+            # halves the resident cache; dequantization is a per-layer
+            # transient.
+            def quant(x):
+                s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1),
+                            keepdims=True) / 127.0
+                s = jnp.maximum(s, 1e-8)
+                return (jnp.clip(jnp.round(x.astype(jnp.float32) / s),
+                                 -127, 127).astype(jnp.int8),
+                        s.astype(jnp.float32))
+            kq, ks = quant(k)
+            vq, vs = quant(v)
+            k_q = write(cache["k"], kq)
+            v_q = write(cache["v"], vq)
+            k_sc = write(cache["k_s"], ks)
+            v_sc = write(cache["v_s"], vs)
+            new_cache = {"k": k_q, "v": v_q, "k_s": k_sc, "v_s": v_sc}
+            k_cache = (k_q.astype(cfg.activation_dtype)
+                       * k_sc.astype(cfg.activation_dtype))
+            v_cache = (v_q.astype(cfg.activation_dtype)
+                       * v_sc.astype(cfg.activation_dtype))
+        else:
+            k_cache = write(cache["k"], k)
+            v_cache = write(cache["v"], v)
+            if not seq_shard:
+                k_cache = constrain_bthd(k_cache, mesh)
+                v_cache = constrain_bthd(v_cache, mesh)
+            new_cache = {"k": k_cache, "v": v_cache}
+        if seq_shard and mesh is not None:
+            out = flash_decode(q, k_cache, v_cache, lengths, mesh=mesh,
+                               window=desc.window)
+        else:
+            out = decode_attention(q, k_cache, v_cache, lengths,
+                                   window=desc.window,
+                                   softcap=cfg.logit_softcap)
+    else:
+        raise ValueError(mode)
+    out = out[:, :, :hq_real]   # drop padded dead-lane heads
+    out = out.reshape(b, s, hq_real * hd) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-style multi-head latent attention).
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ArchConfig) -> dict[str, PSpec]:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": PSpec((d, ql), ("embed", "q_lora")),
+        "q_norm": PSpec((ql,), (None,), init="zeros"),
+        "wq_b": PSpec((ql, h * (dn + dr)), ("q_lora", "heads")),
+        "wkv_a": PSpec((d, kl + dr), ("embed", None)),
+        "kv_norm": PSpec((kl,), (None,), init="zeros"),
+        "wkv_b": PSpec((kl, h * (dn + dv)), ("kv_lora", "heads")),
+        "wo": PSpec((h * dv, d), ("heads", "embed")),
+    }
+
+
+def mla_apply(params, x, cfg: ArchConfig, desc: BlockDesc, *, positions,
+              mode="train", cache=None, lengths=None, mesh=None,
+              seq_shard=False, attn_impl="flash"):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    kl = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (q @ params["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = x @ params["wkv_a"]
+    c_kv = rms_norm(kv_a[..., :kl], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., kl:]                      # (b, s, dr), shared heads
+    cos, sin = rope_angles(positions, dr, desc.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        kv = (c_kv @ params["wkv_b"]).reshape(b, s, h, dn + dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, dr))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # HC1: pad heads to divide the model axis (see attention_apply)
+        qf, k, v, hp, _ = _pad_heads_even(qf, k, v, h, h, mesh)
+        qf = constrain_bthd(qf, mesh)
+        k = constrain_bthd(k, mesh)
+        v = constrain_bthd(v, mesh)
+        k_pos = positions
+        if attn_impl == "flash":
+            out = flash_attention(qf, k, v, positions, k_pos, causal=True)
+        else:
+            out = naive_attention(qf, k, v, positions, k_pos, causal=True)
+        out = out[:, :, :h]
+        if mode == "prefill":
+            new_cache = {"ckv": c_kv, "krope": k_rope}
+    else:
+        # Absorbed decode: attend in the compressed latent space.
+        # score = q_nope·W_uk^T·c_kv + q_rope·k_rope;  out = (p·c_kv)·W_uv.
+        w_b = params["wkv_b"].reshape(kl, h, dn + dv)
+        w_uk = w_b[..., :dn]                    # (kl, h, dn)
+        w_uv = w_b[..., dn:]                    # (kl, h, dv)
+        q_lat = jnp.einsum("bshn,khn->bshk", q_nope, w_uk)  # (b,1,h,kl)
+        ckv_c, kr_c = cache["ckv"], cache["krope"]
+
+        def upd(cb, nb, ln):
+            return lax.dynamic_update_slice(cb, nb, (ln, 0))
+        ckv_c = jax.vmap(upd)(ckv_c, c_kv, lengths)
+        kr_c = jax.vmap(upd)(kr_c, k_rope, lengths)
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        t = ckv_c.shape[1]
+        sc = (jnp.einsum("bshk,btk->bhst", q_lat, ckv_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshr,btr->bhst", q_rope, kr_c,
+                           preferred_element_type=jnp.float32))
+        sc *= (dn + dr) ** -0.5
+        kpos = jnp.arange(t)[None]
+        ok = kpos <= lengths[:, None]
+        sc = jnp.where(ok[:, None, None], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1).astype(ckv_c.dtype)
+        o_lat = jnp.einsum("bhst,btk->bshk", pr, ckv_c)   # (b,1,h,kl)
+        out = jnp.einsum("bshk,khv->bshv", o_lat, w_uv)
+    out = out.reshape(b, s, -1) @ params["wo"]
+    return out, new_cache

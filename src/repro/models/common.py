@@ -1,0 +1,127 @@
+"""Shared model infrastructure: parameter specs with logical sharding axes,
+norms, rotary embeddings, initializers.
+
+Parameters are plain pytrees (nested dicts of ``jnp.ndarray``).  Their
+sharding is described *once*, at spec level: every leaf is declared as a
+:class:`PSpec` carrying its shape and a tuple of **logical axis names**
+("embed", "mlp", "vocab", …).  ``sharding/rules.py`` maps logical names to
+mesh axes.  Stacked (scanned) parameters get a leading "layers" axis added
+by the stacking helpers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PSpec", "init_params", "spec_axes", "stack_specs", "rms_norm",
+           "layer_norm", "apply_rope", "rope_angles", "Initializer"]
+
+Initializer = str  # "normal" | "zeros" | "ones" | "embed"
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declarative parameter spec: shape + logical axes + initializer."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: Initializer = "normal"
+    scale: float | None = None   # None → 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key: jax.Array, spec: PSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return jax.random.normal(key, spec.shape, spec.dtype)
+    # truncated-normal fan-in scaling (maxtext-style)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, spec.shape).astype(spec.dtype)
+
+
+def init_params(key: jax.Array, specs) -> Any:
+    """Materialize a pytree of PSpecs into parameters."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def spec_axes(specs) -> Any:
+    """The parallel pytree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def spec_shapes(specs) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def stack_specs(specs, n: int) -> Any:
+    """Prepend a scanned "layers" axis of size n to every spec."""
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                        s.scale, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in fp32, cast back).
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """(…,) int positions → cos/sin of shape (…, dim/2)."""
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)

@@ -1,0 +1,149 @@
+"""Executable GAN models (the paper's Table I workloads) on GANAX ops.
+
+Generators run every transposed convolution through the GANAX dataflow
+(`kernels.ops.ganax_conv_transpose`, or the pure-JAX polyphase path —
+identical math, XLA-compiled — when ``use_pallas=False``); discriminators
+run plain convolutions through the same unified op (the paper's SIMD mode).
+
+These power the GAN training examples and the wall-clock microbenchmarks
+(GANAX dataflow vs zero-insertion baseline on identical topologies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gans import GAN_MODELS
+from repro.core.analytical import ConvLayer
+from repro.core.tconv import tconv_ganax, tconv_zero_insert
+from repro.kernels.ops import ganax_conv, ganax_conv_transpose
+from repro.kernels.ref import conv_ref
+from repro.models.common import PSpec, init_params
+
+__all__ = ["GanConfig", "generator_specs", "discriminator_specs",
+           "init_gan", "generator_apply", "discriminator_apply",
+           "gan_losses"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GanConfig:
+    name: str
+    z_dim: int = 100
+    dataflow: str = "ganax"     # "ganax" | "zero_insert" (baseline)
+    use_pallas: bool = False    # Pallas kernel vs pure-JAX polyphase
+    channel_scale: float = 1.0  # shrink channels for CPU-sized runs
+
+    @property
+    def layers(self) -> tuple[list[ConvLayer], list[ConvLayer]]:
+        g, d = GAN_MODELS[self.name]
+        if self.channel_scale != 1.0:
+            def shrink(l: ConvLayer) -> ConvLayer:
+                c_in = max(1, int(l.cin * self.channel_scale)) \
+                    if l.cin > 3 else l.cin
+                c_out = max(1, int(l.cout * self.channel_scale)) \
+                    if l.cout > 3 else l.cout
+                return dataclasses.replace(l, cin=c_in, cout=c_out)
+            g = [shrink(l) for l in g]
+            d = [shrink(l) for l in d]
+        return g, d
+
+
+def _conv_specs(layers: Sequence[ConvLayer], prefix: str) -> dict:
+    specs = {}
+    for i, l in enumerate(layers):
+        fan_in = int(jnp.prod(jnp.asarray(l.kernel))) * l.cin
+        specs[f"{prefix}{i}_w"] = PSpec(
+            tuple(l.kernel) + (l.cin, l.cout),
+            (None,) * len(l.kernel) + ("conv_in", "conv_out"),
+            scale=fan_in ** -0.5)   # no batch-norm → fan-in init
+        specs[f"{prefix}{i}_b"] = PSpec((l.cout,), ("conv_out",),
+                                        init="zeros")
+    return specs
+
+
+def generator_specs(cfg: GanConfig) -> dict:
+    g_layers, _ = cfg.layers
+    first = g_layers[0]
+    proj_dim = int(jnp.prod(jnp.asarray(first.in_spatial))) * first.cin
+    specs = {"proj_w": PSpec((cfg.z_dim, proj_dim), (None, "mlp"),
+                             scale=0.02),
+             "proj_b": PSpec((proj_dim,), ("mlp",), init="zeros")}
+    specs.update(_conv_specs(g_layers, "t"))
+    return specs
+
+
+def discriminator_specs(cfg: GanConfig) -> dict:
+    _, d_layers = cfg.layers
+    last = d_layers[-1]
+    return _conv_specs(d_layers, "c")
+
+
+def init_gan(cfg: GanConfig, key: jax.Array):
+    kg, kd = jax.random.split(key)
+    return (init_params(kg, generator_specs(cfg)),
+            init_params(kd, discriminator_specs(cfg)))
+
+
+def _tconv(cfg: GanConfig, x, w, strides, paddings):
+    if cfg.dataflow == "zero_insert":
+        return tconv_zero_insert(x, w, strides, paddings)
+    if cfg.use_pallas and x.ndim == 4:
+        return ganax_conv_transpose(x, w, strides, paddings)
+    return tconv_ganax(x, w, strides, paddings)
+
+
+def generator_apply(params, z, cfg: GanConfig):
+    """z (B, z_dim) → image (B, *spatial, C)."""
+    g_layers, _ = cfg.layers
+    first = g_layers[0]
+    x = z @ params["proj_w"] + params["proj_b"]
+    x = x.reshape((z.shape[0],) + tuple(first.in_spatial) + (first.cin,))
+    x = jax.nn.relu(x)
+    for i, l in enumerate(g_layers):
+        w = params[f"t{i}_w"]
+        b = params[f"t{i}_b"]
+        if l.transposed:
+            x = _tconv(cfg, x, w, l.strides, l.paddings)
+        else:  # encoder stage inside an encoder-decoder generator
+            x = conv_ref(x, w, l.strides, l.paddings)
+        x = x + b
+        x = jnp.tanh(x) if i == len(g_layers) - 1 else jax.nn.relu(x)
+    return x
+
+
+def discriminator_apply(params, img, cfg: GanConfig, use_pallas=None):
+    """img (B, *spatial, C) → logits (B,)."""
+    _, d_layers = cfg.layers
+    x = img
+    use_pallas = cfg.use_pallas if use_pallas is None else use_pallas
+    for i, l in enumerate(d_layers):
+        w = params[f"c{i}_w"]
+        b = params[f"c{i}_b"]
+        if use_pallas and x.ndim == 4:
+            x = ganax_conv(x, w, l.strides, l.paddings)
+        else:
+            x = conv_ref(x, w, l.strides, l.paddings)
+        x = x + b
+        if i < len(d_layers) - 1:
+            x = jax.nn.leaky_relu(x, 0.2)
+    return x.reshape(img.shape[0], -1).mean(axis=-1)
+
+
+def gan_losses(g_params, d_params, z, real, cfg: GanConfig):
+    """Non-saturating GAN losses (generator, discriminator)."""
+    fake = generator_apply(g_params, z, cfg)
+    d_fake = discriminator_apply(d_params, fake, cfg)
+    d_real = discriminator_apply(d_params, real, cfg)
+
+    def bce(logits, target):
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * target +
+            jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    d_loss = bce(d_real, 1.0) + bce(d_fake, 0.0)
+    g_loss = bce(d_fake, 1.0)
+    return g_loss, d_loss, fake

@@ -1,0 +1,46 @@
+"""Gated MLP variants (SwiGLU / GeGLU / plain GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import PSpec
+
+__all__ = ["mlp_specs", "mlp_apply"]
+
+
+def mlp_specs(cfg: ArchConfig, kind: str, d_ff: int | None = None
+              ) -> dict[str, PSpec]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi": PSpec((d, f), ("embed", "mlp")),
+            "wg": PSpec((d, f), ("embed", "mlp")),
+            "wo": PSpec((f, d), ("mlp", "embed")),
+        }
+    if kind == "gelu":
+        return {
+            "wi": PSpec((d, f), ("embed", "mlp")),
+            "bi": PSpec((f,), ("mlp",), init="zeros"),
+            "wo": PSpec((f, d), ("mlp", "embed")),
+            "bo": PSpec((d,), (None,), init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+        return h @ params["wo"]
+    if kind == "geglu":
+        h = jax.nn.gelu(x @ params["wg"], approximate=True) * (
+            x @ params["wi"])
+        return h @ params["wo"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["wi"] + params["bi"].astype(x.dtype),
+                        approximate=True)
+        return h @ params["wo"] + params["bo"].astype(x.dtype)
+    raise ValueError(kind)

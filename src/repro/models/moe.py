@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based einsum
+dispatch (the GShard/Switch dataflow — TPU-native: dispatch/combine are
+dense contractions that SPMD-partition cleanly with experts sharded over
+the ``model`` mesh axis).
+
+Includes the production losses: load-balance auxiliary loss and router
+z-loss.  ``olmoe`` (64e top-8) and ``llama4-scout`` (16e top-1 + shared
+expert) both route through here.
+
+GANAX analogy (DESIGN.md §Arch-applicability): tokens-per-expert is the
+same "structured irregular work" shape as taps-per-phase; the capacity
+schedule plays the role of the longest-first phase ordering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import PSpec
+from repro.models.mlp import mlp_apply, mlp_specs
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def moe_specs(cfg: ArchConfig) -> dict[str, PSpec]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    specs = {
+        "router": PSpec((d, e), ("embed", None), scale=0.02),
+        "wi": PSpec((e, d, f), ("expert", "embed", "expert_mlp")),
+        "wg": PSpec((e, d, f), ("expert", "embed", "expert_mlp")),
+        "wo": PSpec((e, f, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        shared = mlp_specs(cfg, "swiglu",
+                           d_ff=cfg.expert_d_ff * cfg.n_shared_experts)
+        specs.update({f"shared_{k}": v for k, v in shared.items()})
+    return specs
+
+
+DEFAULT_GROUP = 256
+
+
+def moe_apply(params, x, cfg: ArchConfig, *, capacity_factor: float | None
+              = None, group_size: int = DEFAULT_GROUP):
+    """x: (B, S, D) → (y, aux).
+
+    Tokens are routed within *groups* of ``group_size`` (GShard): the
+    dispatch/combine contractions cost O(T·group_size·k·cf·D) — linear in
+    total tokens — instead of the quadratic cost of a global capacity
+    buffer.  Groups inherit the batch sharding (the group dim is a reshape
+    of (batch, seq)), so routing is local to each data shard while expert
+    FFNs stay expert-sharded over ``model``.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    t = b * s
+    sg = min(group_size, t)
+    assert t % sg == 0, (t, sg)
+    g = t // sg
+    xt = x.reshape(g, sg, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt,
+                        params["router"].astype(x.dtype)
+                        ).astype(jnp.float32)                  # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G,Sg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(sg * k * cf / e))
+    # Position of each (token, slot) in its expert's buffer, per group.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)      # (G,Sg,k,E)
+    flat = onehot.reshape(g, sg * k, e)
+    pos_in = (jnp.cumsum(flat, axis=1) - flat).reshape(g, sg, k, e)
+    pos = (pos_in * onehot).sum(-1)                            # (G,Sg,k)
+    keep = pos < capacity
+    disp_k = (jax.nn.one_hot(gate_idx, e, dtype=x.dtype)[..., None]
+              * jax.nn.one_hot(pos, capacity, dtype=x.dtype)[..., None, :]
+              * keep[..., None, None].astype(x.dtype))        # (G,Sg,k,E,C)
+    combine = (disp_k * gate_vals[..., None, None].astype(x.dtype)
+               ).sum(axis=2)                                   # (G,Sg,E,C)
+    disp = disp_k.sum(axis=2)                                  # (G,Sg,E,C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xt)                # (G,E,C,D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])         # (G,E,C,D)
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    if cfg.n_shared_experts:
+        shared = {k_[7:]: v for k_, v in params.items()
+                  if k_.startswith("shared_")}
+        y = y + mlp_apply(shared, xt.reshape(t, d), "swiglu").reshape(
+            g, sg, d)
+
+    # aux losses (fp32)
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = (jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+          .sum(axis=(0, 1, 2)) / (t * k))                      # frac/expert
+    load_balance = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance_loss": load_balance, "router_z_loss": z_loss,
+           "expert_load": ce}
+    return y.reshape(b, s, d), aux

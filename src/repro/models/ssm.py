@@ -1,0 +1,201 @@
+"""Mamba2 mixer: chunked SSD (state-space duality) + single-step decode.
+
+The SSD computation follows the Mamba2 paper's block decomposition: the
+sequence is split into chunks of ``Q`` tokens; within a chunk the recurrence
+is evaluated as a (masked, decay-weighted) attention-like contraction
+(quadratic in Q, MXU-friendly); across chunks a ``lax.scan`` carries the
+(B, H, P, N) state — linear in sequence length, which is what makes the
+``long_500k`` shape runnable for SSM/hybrid archs.
+
+Decode is the O(1) recurrent update: ``h ← h·exp(dA) + dt·x⊗B``,
+``y = C·h + D·x``, with a (conv_width-1)-deep rolling buffer for the causal
+depthwise conv.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.common import PSpec, rms_norm
+
+__all__ = ["ssm_specs", "ssm_apply", "ssm_decode_step"]
+
+CHUNK = 256
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    g = cfg.ssm_groups
+    n = cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return di, h, p, g, n, conv_dim
+
+
+def ssm_specs(cfg: ArchConfig) -> dict[str, PSpec]:
+    d = cfg.d_model
+    di, h, p, g, n, conv_dim = _dims(cfg)
+    w = cfg.ssm_conv
+    return {
+        "in_proj": PSpec((d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner")),
+        "conv_w": PSpec((w, conv_dim), (None, "ssm_conv_dim")),
+        "conv_b": PSpec((conv_dim,), ("ssm_conv_dim",), init="zeros"),
+        "A_log": PSpec((h,), ("ssm_heads",), init="ones"),
+        "D": PSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": PSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": PSpec((di,), ("ssm_inner",), init="zeros"),
+        "out_proj": PSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, h, p, g, n, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, cache=None):
+    """Depthwise causal conv1d.  xbc (B, L, C); conv_w (W, C).
+
+    Returns (out, new_cache) where cache holds the last W-1 inputs.
+    """
+    w = conv_w.shape[0]
+    if cache is not None:
+        xfull = jnp.concatenate([cache, xbc], axis=1)
+        new_cache = xfull[:, -(w - 1):]
+    else:
+        xfull = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+        new_cache = xfull[:, -(w - 1):]
+    out = lax.conv_general_dilated(
+        xfull, conv_w[:, None, :].astype(xfull.dtype), window_strides=(1,),
+        padding="VALID", dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu(out + conv_b.astype(out.dtype)), new_cache
+
+
+def _ssd_chunked(x, dt, A, B, C, D, h0=None, chunk=CHUNK):
+    """Chunked SSD core.
+
+    x (B,L,H,P); dt (B,L,H); A (H,) (negative); B,C (B,L,G,N); D (H,).
+    Returns (y (B,L,H,P), h_final (B,H,P,N)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    r = h // g
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def chunkify(t):
+        return t.reshape((b, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunkify(x * dt[..., None]), chunkify(dt), chunkify(B),
+          chunkify(C))
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(hprev, blk):
+        xdt, dtc, Bc, Cc = blk           # (B,Q,...)
+        dA = dtc.astype(jnp.float32) * A  # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)      # inclusive
+        # intra-chunk; mask BEFORE exp (upper-triangle entries are positive
+        # and would overflow, poisoning gradients through the where).
+        seg = cum[:, :, None, :] - cum[:, None, :, :]        # (B,i,j,H)
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        Lm = jnp.exp(seg)
+        scores = jnp.einsum("bign,bjgn->bgij", Cc, Bc,
+                            preferred_element_type=jnp.float32)
+        Lg = Lm.reshape(b, q, q, g, r)
+        xg = xdt.reshape(b, q, g, r, p)
+        y_in = jnp.einsum("bgij,bijgr,bjgrp->bigrp", scores, Lg, xg,
+                          preferred_element_type=jnp.float32)
+        # inbound state contribution
+        hg = hprev.reshape(b, g, r, p, n)
+        y_st = jnp.einsum("bign,bgrpn->bigrp", Cc, hg,
+                          preferred_element_type=jnp.float32)
+        y_st = y_st * jnp.exp(cum).reshape(b, q, g, r)[..., None]
+        y = (y_in + y_st).reshape(b, q, h, p)
+        # state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)            # (B,Q,H)
+        dxg = (xdt * decay_end[..., None]).reshape(b, q, g, r, p)
+        h_add = jnp.einsum("bjgrp,bjgn->bgrpn", dxg, Bc,
+                           preferred_element_type=jnp.float32)
+        h_new = hprev * jnp.exp(cum[:, -1, :])[:, :, None, None] + \
+            h_add.reshape(b, h, p, n)
+        return h_new, y
+
+    h_final, ys = lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, nc * q, h, p)[:, :l]
+    y = y + x[:, :l] * D[:, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_apply(params, x, cfg: ArchConfig, *, mode="train", cache=None):
+    """Full-sequence Mamba2 mixer.  Returns (y, new_cache)."""
+    b, l, d = x.shape
+    di, h, p, g, n, conv_dim = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_cache = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xi, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xi = xi.reshape(b, l, h, p)
+    B = B.reshape(b, l, g, n)
+    C = C.reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"])               # (B,L,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+    y, h_final = _ssd_chunked(xi, dt, A, B, C,
+                              params["D"].astype(jnp.float32))
+    y = y.reshape(b, l, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"h": h_final.astype(jnp.float32),
+                     "conv": conv_cache}
+    return out, new_cache
+
+
+def ssm_decode_step(params, x, cfg: ArchConfig, cache):
+    """Single-token recurrent update.  x (B,1,D)."""
+    b, _, d = x.shape
+    di, h, p, g, n, conv_dim = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_cache = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   cache=cache["conv"])
+    xi, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xi = xi.reshape(b, h, p)
+    B = B.reshape(b, g, n)
+    C = C.reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"])[:, 0]         # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                   # (B,H)
+    r = h // g
+    hprev = cache["h"]                                     # (B,H,P,N)
+    xdt = (xi * dt[..., None]).reshape(b, g, r, p)
+    h_add = jnp.einsum("bgrp,bgn->bgrpn", xdt.astype(jnp.float32),
+                       B.astype(jnp.float32)).reshape(b, h, p, n)
+    h_new = hprev * dA[:, :, None, None] + h_add
+    hg = h_new.reshape(b, g, r, p, n)
+    y = jnp.einsum("bgn,bgrpn->bgrp", C.astype(jnp.float32), hg)
+    y = y.reshape(b, h, p) + xi.astype(jnp.float32) * \
+        params["D"][:, None].astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"h": h_new, "conv": conv_cache}

@@ -1,0 +1,426 @@
+"""Model assembly: decoder LMs, encoder, VLM backbone — all families.
+
+One code path serves every assigned architecture.  Depth is expressed as
+*segments* (``ArchConfig.layer_segments``): each segment is a
+``lax.scan`` over stacked per-layer parameters (compile time and HLO size
+stay flat in depth — a 64-layer 512-device train step lowers in seconds),
+with the blocks inside a segment's repeating pattern unrolled (this is how
+gemma3's 5:1 local:global and hymba's sparse-global patterns keep their
+*true* sub-quadratic FLOPs instead of being masked-out full attention).
+
+Entry points:
+  * ``model_specs(cfg)``      → PSpec pytree (shapes + logical sharding axes)
+  * ``init(cfg, key)``        → params
+  * ``forward(params, batch, cfg, mode=...)`` → logits (+cache at prefill)
+  * ``loss_fn`` / ``decode_step`` / ``init_cache``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, BlockDesc
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (PSpec, init_params, rms_norm, spec_axes,
+                                 stack_specs)
+from repro.models.mlp import mlp_apply, mlp_specs
+
+__all__ = ["RunFlags", "model_specs", "model_axes", "init", "forward",
+           "loss_fn", "decode_step", "init_cache", "count_params",
+           "model_flops_per_token"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Runtime/performance knobs threaded through the forward pass."""
+    attn_impl: str = "flash"          # "flash" | "naive"
+    remat: bool = True
+    remat_policy: str = "nothing"     # "nothing" | "dots"
+    seq_shard_decode: bool = False    # flash-decode over data-sharded cache
+    mesh: Any = None
+    scan_layers: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Specs.
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ArchConfig, desc: BlockDesc) -> dict[str, Any]:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "ln_mix": PSpec((d,), (None,), init="zeros"),
+    }
+    if desc.mixer == "attn":
+        specs["attn"] = attn_mod.attention_specs(cfg, desc)
+    elif desc.mixer == "mla":
+        specs["attn"] = attn_mod.mla_specs(cfg)
+    elif desc.mixer == "ssm":
+        specs["ssm"] = ssm_mod.ssm_specs(cfg)
+    elif desc.mixer == "hybrid":
+        specs["attn"] = attn_mod.attention_specs(cfg, desc)
+        specs["ssm"] = ssm_mod.ssm_specs(cfg)
+    else:
+        raise ValueError(desc.mixer)
+    if desc.mlp == "moe":
+        specs["ln_mlp"] = PSpec((d,), (None,), init="zeros")
+        specs["mlp"] = moe_mod.moe_specs(cfg)
+    elif desc.mlp != "none":
+        specs["ln_mlp"] = PSpec((d,), (None,), init="zeros")
+        specs["mlp"] = mlp_specs(cfg, desc.mlp)
+    return specs
+
+
+def model_specs(cfg: ArchConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": PSpec((cfg.padded_vocab, d), ("vocab", "embed"),
+                       init="embed", scale=1.0),
+        "final_norm": PSpec((d,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = PSpec((d, cfg.padded_vocab), ("embed", "vocab"))
+    if cfg.family == "vlm":
+        specs["img_proj"] = PSpec((cfg.frontend_dim, d), (None, "embed"))
+    if cfg.family == "encoder":
+        specs["frontend_proj"] = PSpec((cfg.frontend_dim, d),
+                                       (None, "embed"))
+        # sized for the largest assigned encode shape (prefill_32k)
+        specs["pos_embed"] = PSpec((32768, d), (None, "embed"), scale=0.02)
+    segs = {}
+    for si, (descs, rep) in enumerate(cfg.layer_segments()):
+        seg = {f"pos{di}": _block_specs(cfg, desc)
+               for di, desc in enumerate(descs)}
+        segs[f"seg{si}"] = stack_specs(seg, rep)
+    specs["segments"] = segs
+    return specs
+
+
+def model_axes(cfg: ArchConfig):
+    return spec_axes(model_specs(cfg))
+
+
+def init(cfg: ArchConfig, key: jax.Array):
+    return init_params(key, model_specs(cfg))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    specs = model_specs(cfg)
+    leaves = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, PSpec))
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= int(d)    # python ints: no int32 overflow at 7B params
+        total += n
+    return total
+
+
+def model_flops_per_token(cfg: ArchConfig) -> float:
+    """MODEL_FLOPS/token = 6·N (dense) or 6·N_active (MoE), for §Roofline."""
+    specs = model_specs(cfg)
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, PSpec))[0]:
+        n = 1
+        for dim in s.shape:
+            n *= dim
+        keys = "/".join(str(p) for p in path)
+        if cfg.moe and ("'wi'" in keys or "'wg'" in keys or "'wo'" in keys) \
+                and "'mlp'" in keys and "shared" not in keys:
+            # routed experts: only top_k of n_experts active per token
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return 6.0 * total
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+
+def _block_apply(params, x, cfg, desc, *, positions, mode, cache, lengths,
+                 flags: RunFlags):
+    new_cache = {}
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+           "router_z_loss": jnp.zeros((), jnp.float32)}
+    h = rms_norm(x, params["ln_mix"], cfg.norm_eps)
+    seq_shard = flags.seq_shard_decode and desc.window == 0
+    if desc.mixer in ("attn", "mla"):
+        fn = attn_mod.mla_apply if desc.mixer == "mla" else \
+            attn_mod.attention_apply
+        out, c = fn(params["attn"], h, cfg, desc, positions=positions,
+                    mode=mode, cache=None if cache is None else
+                    cache.get("attn"), lengths=lengths, mesh=flags.mesh,
+                    seq_shard=seq_shard, attn_impl=flags.attn_impl)
+        if c is not None:
+            new_cache["attn"] = c
+    elif desc.mixer == "ssm":
+        if mode == "decode":
+            out, c = ssm_mod.ssm_decode_step(params["ssm"], h, cfg,
+                                             cache["ssm"])
+        else:
+            out, c = ssm_mod.ssm_apply(params["ssm"], h, cfg, mode=mode)
+        if c is not None:
+            new_cache["ssm"] = c
+    elif desc.mixer == "hybrid":
+        a_out, ac = attn_mod.attention_apply(
+            params["attn"], h, cfg, desc, positions=positions, mode=mode,
+            cache=None if cache is None else cache.get("attn"),
+            lengths=lengths, mesh=flags.mesh, seq_shard=seq_shard,
+            attn_impl=flags.attn_impl)
+        if mode == "decode":
+            s_out, sc = ssm_mod.ssm_decode_step(params["ssm"], h, cfg,
+                                                cache["ssm"])
+        else:
+            s_out, sc = ssm_mod.ssm_apply(params["ssm"], h, cfg, mode=mode)
+        out = 0.5 * (a_out + s_out)
+        if ac is not None:
+            new_cache["attn"] = ac
+        if sc is not None:
+            new_cache["ssm"] = sc
+    else:
+        raise ValueError(desc.mixer)
+    x = x + out
+    if desc.mlp == "moe":
+        h = rms_norm(x, params["ln_mlp"], cfg.norm_eps)
+        y, moe_aux = moe_mod.moe_apply(params["mlp"], h, cfg)
+        aux["load_balance_loss"] += moe_aux["load_balance_loss"]
+        aux["router_z_loss"] += moe_aux["router_z_loss"]
+        x = x + y
+    elif desc.mlp != "none":
+        h = rms_norm(x, params["ln_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(params["mlp"], h, desc.mlp)
+    return x, new_cache, aux
+
+
+def _embed_in(params, batch, cfg: ArchConfig):
+    dt = cfg.activation_dtype
+    if cfg.family == "encoder":
+        feats = batch["features"].astype(dt)
+        x = feats @ params["frontend_proj"].astype(dt)
+        s = x.shape[1]
+        return x + params["pos_embed"][:s].astype(dt)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = batch["img_embeds"].astype(dt) @ params["img_proj"].astype(dt)
+        x = jnp.concatenate([img, x[:, cfg.img_tokens:]], axis=1) \
+            if x.shape[1] >= cfg.img_tokens else x
+    return x
+
+
+def _logits(params, x, cfg: ArchConfig):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ head.astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:  # mask padding columns
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def _cast_params(params, dt):
+    """Mixed precision: compute in the activation dtype (norm internals and
+    SSM decay math re-upcast to fp32 where it matters)."""
+    return jax.tree.map(
+        lambda a: a.astype(dt) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, params)
+
+
+def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
+            cache=None, lengths=None, flags: RunFlags = RunFlags(),
+            last_logit_only: bool = False):
+    """Returns (logits, new_cache, aux); new_cache is None in train mode.
+
+    ``last_logit_only``: prefill only needs the final position's logits —
+    computing the full (S, vocab) matmul wastes ~2·S·d·V FLOPs (measured:
+    ~half of qwen1.5-32b prefill_32k compute, EXPERIMENTS.md §Perf HC3).
+    """
+    params = _cast_params(params, cfg.activation_dtype)
+    x = _embed_in(params, batch, cfg)
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = lengths[:, None]
+    else:
+        positions = batch.get("positions") if isinstance(batch, dict) else None
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    aux_sum = {"load_balance_loss": jnp.zeros((), jnp.float32),
+               "router_z_loss": jnp.zeros((), jnp.float32)}
+    new_cache = {}
+    for si, (descs, rep) in enumerate(cfg.layer_segments()):
+        seg_params = params["segments"][f"seg{si}"]
+        seg_cache = None if cache is None else cache[f"seg{si}"]
+
+        def body(xc, layer_in, descs=descs):
+            xx = xc
+            lp, lc = layer_in
+            outs_cache = {}
+            aux_l = {"load_balance_loss": jnp.zeros((), jnp.float32),
+                     "router_z_loss": jnp.zeros((), jnp.float32)}
+            for di, desc in enumerate(descs):
+                blk_cache = None if lc is None else lc[f"pos{di}"]
+                xx, nc, aux = _block_apply(
+                    lp[f"pos{di}"], xx, cfg, desc, positions=positions,
+                    mode=mode, cache=blk_cache, lengths=lengths,
+                    flags=flags)
+                outs_cache[f"pos{di}"] = nc
+                aux_l = {k: aux_l[k] + aux[k] for k in aux_l}
+            return xx, (outs_cache, aux_l)
+
+        if flags.remat and mode == "train":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if flags.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=flags.scan_layers)
+
+        if flags.scan_layers and mode == "decode":
+            # Cache lives in the scan CARRY and is updated in place with
+            # dynamic_update_index — XLA aliases the whole buffer through
+            # the loop (with xs→ys the cache would be copied: +2× temp).
+            def dbody(carry, lp, descs=descs):
+                xx, cache_st, li = carry
+                lc = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, li, 0,
+                                                       keepdims=False),
+                    cache_st)
+                xx, (nc, aux_l) = body(xx, (lp, lc))
+                cache_st = jax.tree.map(
+                    lambda a, v: lax.dynamic_update_index_in_dim(
+                        a, v.astype(a.dtype), li, 0), cache_st, nc)
+                return (xx, cache_st, li + 1), aux_l
+            (x, seg_new_cache, _), aux_seg = lax.scan(
+                dbody, (x, seg_cache, jnp.zeros((), jnp.int32)),
+                seg_params)
+            aux_sum = {k: aux_sum[k] + aux_seg[k].sum() for k in aux_sum}
+        elif flags.scan_layers:
+            xs = (seg_params, seg_cache)
+            x, (seg_new_cache, aux_seg) = lax.scan(body, x, xs)
+            aux_sum = {k: aux_sum[k] + aux_seg[k].sum() for k in aux_sum}
+        else:
+            seg_new_cache = None
+            for li in range(rep):
+                lp = jax.tree.map(lambda a: a[li], seg_params)
+                lc = None if seg_cache is None else jax.tree.map(
+                    lambda a: a[li], seg_cache)
+                x, (nc, aux_l) = body(x, (lp, lc))
+                aux_sum = {k: aux_sum[k] + aux_l[k] for k in aux_sum}
+                if nc:
+                    if seg_new_cache is None:
+                        seg_new_cache = jax.tree.map(
+                            lambda a: jnp.zeros((rep,) + a.shape, a.dtype),
+                            nc)
+                    seg_new_cache = jax.tree.map(
+                        lambda acc, v: acc.at[li].set(v), seg_new_cache, nc)
+        new_cache[f"seg{si}"] = seg_new_cache
+    if last_logit_only:
+        x = x[:, -1:]
+    logits = _logits(params, x, cfg)
+    return logits, (new_cache if mode in ("prefill", "decode") else None), \
+        aux_sum
+
+
+# ---------------------------------------------------------------------------
+# Loss / decode.
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ArchConfig, flags: RunFlags = RunFlags(),
+            aux_weight: float = 0.01, z_weight: float = 1e-3):
+    """Next-token (causal) or masked-frame (encoder) cross-entropy.
+
+    The label-logit term uses a one-hot contraction so the vocab dimension
+    can stay model-sharded end-to-end (no gather across shards).
+    """
+    logits, _, aux = forward(params, batch, cfg, mode="train", flags=flags)
+    logits = logits.astype(jnp.float32)
+    if cfg.family == "encoder":
+        labels = batch["labels"]
+        weights = batch.get("label_mask")
+        if weights is None:
+            weights = jnp.ones_like(labels, jnp.float32)
+    else:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        weights = jnp.pad(
+            jnp.ones_like(labels[:, :-1], jnp.float32), ((0, 0), (0, 1)))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.einsum("bsv,bsv->bs", logits,
+                     jax.nn.one_hot(labels, cfg.padded_vocab,
+                                    dtype=jnp.float32))
+    nll = (lse - lab) * weights
+    loss = nll.sum() / jnp.maximum(weights.sum(), 1.0)
+    total = loss + aux_weight * aux["load_balance_loss"] + \
+        z_weight * aux["router_z_loss"]
+    metrics = {"loss": loss, "aux_lb": aux["load_balance_loss"],
+               "aux_z": aux["router_z_loss"],
+               "tokens": weights.sum()}
+    return total, metrics
+
+
+def decode_step(params, cache, tokens, lengths, cfg: ArchConfig,
+                flags: RunFlags = RunFlags()):
+    """One decoding step.  tokens (B,1) → (logits (B,vocab), new_cache)."""
+    logits, new_cache, _ = forward(params, {"tokens": tokens}, cfg,
+                                   mode="decode", cache=cache,
+                                   lengths=lengths, flags=flags)
+    return logits[:, -1], new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None, kv_dtype: str = "bf16") -> dict:
+    """Zero-initialized cache pytree matching the segment structure.
+
+    ``kv_dtype="int8"``: quantized attention cache with per-(token, head)
+    fp32 scales (×2 less resident HBM; see EXPERIMENTS.md §Perf HC2).
+    """
+    dt = dtype or cfg.activation_dtype
+    hd = cfg.resolved_head_dim
+    cache: dict[str, Any] = {}
+    for si, (descs, rep) in enumerate(cfg.layer_segments()):
+        seg = {}
+        for di, desc in enumerate(descs):
+            blk = {}
+            if desc.mixer == "attn" or desc.mixer == "hybrid":
+                # NOTE: local (windowed) layers could use a ring buffer of
+                # size `window`; we keep absolute-position full-length
+                # caches for simplicity and track the ring-buffer variant
+                # as a memory-term optimization (EXPERIMENTS.md §Perf).
+                kv_dt = jnp.int8 if kv_dtype == "int8" else dt
+                blk["attn"] = {
+                    "k": jnp.zeros((rep, batch, max_len, cfg.n_kv_heads,
+                                    hd), kv_dt),
+                    "v": jnp.zeros((rep, batch, max_len, cfg.n_kv_heads,
+                                    hd), kv_dt),
+                }
+                if kv_dtype == "int8":
+                    blk["attn"]["k_s"] = jnp.zeros(
+                        (rep, batch, max_len, 1, 1), jnp.float32)
+                    blk["attn"]["v_s"] = jnp.zeros(
+                        (rep, batch, max_len, 1, 1), jnp.float32)
+            if desc.mixer == "mla":
+                blk["attn"] = {
+                    "ckv": jnp.zeros((rep, batch, max_len,
+                                      cfg.kv_lora_rank), dt),
+                    "krope": jnp.zeros((rep, batch, max_len,
+                                        cfg.qk_rope_head_dim), dt),
+                }
+            if desc.mixer in ("ssm", "hybrid"):
+                di_, h, p, g, n, conv_dim = ssm_mod._dims(cfg)
+                blk["ssm"] = {
+                    "h": jnp.zeros((rep, batch, h, p, n), jnp.float32),
+                    "conv": jnp.zeros((rep, batch, cfg.ssm_conv - 1,
+                                       conv_dim), dt),
+                }
+            seg[f"pos{di}"] = blk
+        cache[f"seg{si}"] = seg
+    return cache

@@ -1,0 +1,160 @@
+"""Batched decode engine with slot-based continuous batching.
+
+The engine maintains a fixed pool of ``n_slots`` sequence slots sharing one
+static-shaped cache (jit-stable).  Requests are admitted into free slots
+(prefill writes the prompt's cache entries at the slot's rows), every
+``step()`` decodes *all* active slots in one batched forward, and finished
+sequences (EOS or max-length) free their slots immediately — new requests
+can be admitted between any two steps (continuous batching at step
+granularity).
+
+The decode step is jitted with the cache **donated**, so the cache is
+updated in place on device (no per-step reallocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tr
+from repro.serve.sampling import sample
+
+__all__ = ["EngineConfig", "DecodeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 8
+    max_len: int = 512
+    max_new: int = 0           # 0 → generate until max_len
+    eos_id: int = -1           # -1 → never stop on token
+    temperature: float = 0.0   # greedy by default
+    top_k: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 flags: tr.RunFlags = tr.RunFlags(), seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.flags = flags
+        self.cache = tr.init_cache(cfg, ecfg.n_slots, ecfg.max_len)
+        self.lengths = jnp.full((ecfg.n_slots,), 0, jnp.int32)
+        self.active = np.zeros((ecfg.n_slots,), bool)
+        self.slot_req: list[Request | None] = [None] * ecfg.n_slots
+        self.last_tokens = jnp.zeros((ecfg.n_slots, 1), jnp.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self.steps = 0
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _decode(params, cache, tokens, lengths, key):
+            logits, cache = tr.decode_step(params, cache, tokens, lengths,
+                                           cfg, flags)
+            toks = sample(logits, key, temperature=ecfg.temperature,
+                          top_k=ecfg.top_k)
+            return toks, cache
+        self._decode = _decode
+
+        @jax.jit
+        def _prefill_one(params, tokens):
+            # tokens (1, S) → (next_token_logits, cache_for_prompt)
+            logits, cache, _ = tr.forward(params, {"tokens": tokens}, cfg,
+                                          mode="prefill", flags=flags)
+            return logits[:, -1], cache
+        self._prefill_one = _prefill_one
+
+    # -- slot management ------------------------------------------------------
+    def try_admit(self, req: Request) -> bool:
+        free = [i for i in range(self.ecfg.n_slots) if not self.active[i]]
+        if not free:
+            return False
+        slot = free[0]
+        s = len(req.prompt)
+        assert s < self.ecfg.max_len, "prompt too long for engine"
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, pcache = self._prefill_one(self.params, toks)
+        # write the prompt cache into the slot's rows
+        self.cache = _merge_slot_cache(self.cache, pcache, slot, s)
+        first = sample(logits, self._next_key(),
+                       temperature=self.ecfg.temperature,
+                       top_k=self.ecfg.top_k)
+        req.generated.append(int(first[0]))
+        self.last_tokens = self.last_tokens.at[slot, 0].set(first[0])
+        self.lengths = self.lengths.at[slot].set(s)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        return True
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    # -- stepping -------------------------------------------------------------
+    def step(self):
+        """One batched decode step over all active slots."""
+        if not self.active.any():
+            return
+        toks, self.cache = self._decode(self.params, self.cache,
+                                        self.last_tokens, self.lengths,
+                                        self._next_key())
+        self.steps += 1
+        self.lengths = self.lengths + jnp.asarray(self.active, jnp.int32)
+        toks_np = np.asarray(toks)
+        self.last_tokens = toks[:, None]
+        for slot in range(self.ecfg.n_slots):
+            if not self.active[slot]:
+                continue
+            req = self.slot_req[slot]
+            tok = int(toks_np[slot])
+            req.generated.append(tok)
+            if tok == self.ecfg.eos_id or \
+                    (self.ecfg.max_new and
+                     len(req.generated) >= self.ecfg.max_new) or \
+                    int(self.lengths[slot]) >= self.ecfg.max_len - 1:
+                req.done = True
+                self.active[slot] = False
+                self.slot_req[slot] = None
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Admit+step until all requests complete (continuous batching)."""
+        pending = list(requests)
+        done: list[Request] = []
+        while (pending or self.active.any()) and self.steps < max_steps:
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            done.extend(r for r in requests
+                        if r.done and r not in done)
+        return requests
+
+
+def _merge_slot_cache(cache, pcache, slot: int, s: int):
+    """Write a (1, S, ...) prefill cache into row `slot` of the engine
+    cache (length dims differ: prefill cache covers the prompt only)."""
+    def merge(c, p):
+        # c: (L, n_slots, T, ...) or (L, n_slots, ...) state caches
+        if p.ndim >= 3 and c.shape[2] >= p.shape[2] and c.ndim == p.ndim \
+                and p.shape[1] == 1:
+            # sequence cache: write first s rows
+            idx = (slice(None), slice(slot, slot + 1), slice(0, p.shape[2]))
+            return c.at[idx].set(p)
+        if p.shape[1] == 1:  # state cache (ssm h / conv)
+            return c.at[:, slot:slot + 1].set(p)
+        raise ValueError((c.shape, p.shape))
+    return jax.tree.map(merge, cache, pcache)

@@ -1,0 +1,115 @@
+"""Collective matmul: ring all-gather overlapped with compute.
+
+The §Roofline collective term for TP training is dominated by blocking
+all-gathers/psums around the row/column-parallel matmuls.  The classic TPU
+remedy (Wang et al., "Overlap communication with computation") decomposes
+
+    Y = all_gather(X, axis) @ W        (X row-sharded, W local)
+
+into a ring: each step multiplies the resident X shard while `ppermute`
+forwards it to the neighbor — the DMA for step i+1 overlaps the MXU work
+of step i, hiding up to (P−1)/P of the gather latency.  XLA can do this
+automatically in some cases (`--xla_tpu_enable_async_collective_fusion`);
+this module provides the explicit shard_map construction for the cases it
+misses, plus the matching reduce-scatter form for the backward.
+
+Used as an opt-in building block (`flags`-level wiring is left to the
+perf harness; correctness is locked by tests/test_collective_matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ring_allgather_matmul", "ring_matmul_reducescatter"]
+
+
+def _ring_perm(p: int, direction: int = 1):
+    return [(j, (j + direction) % p) for j in range(p)]
+
+
+def ring_allgather_matmul(x, w, mesh: Mesh, axis: str = "model"):
+    """Y = all_gather(x, axis) @ w, gather overlapped with compute.
+
+    x: (m, k) with m sharded over `axis` (m_local per shard);
+    w: (k, n) with n sharded over `axis` (local shard used as-is).
+    Returns Y: (m_global, n) with n sharded over `axis`.
+    """
+    p = mesh.shape[axis]
+
+    def local(x_loc, w_loc):
+        m_loc = x_loc.shape[0]
+        idx = lax.axis_index(axis)
+        out = jnp.zeros((m_loc * p, w_loc.shape[1]), x_loc.dtype)
+
+        def body(i, carry):
+            x_cur, out = carry
+            # x_cur currently holds shard (idx + i) mod p's rows
+            y = x_cur @ w_loc
+            row = ((idx + i) % p) * m_loc
+            out = lax.dynamic_update_slice(out, y, (row, 0))
+            # forward to the ring neighbor (overlaps next step's matmul)
+            x_nxt = lax.ppermute(x_cur, axis, _ring_perm(p, -1))
+            return x_nxt, out
+
+        _, out = lax.fori_loop(0, p, body, (x_loc, out))
+        return out
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(None, axis)),
+        out_specs=P(None, axis),
+        check_vma=False)
+    return fn(x, w)
+
+
+def ring_matmul_reducescatter(x, w, mesh: Mesh, axis: str = "model"):
+    """Y = reduce_scatter(x @ w, axis) with the scatter overlapped.
+
+    x: (m, k) with k sharded over `axis`; w: (k, n) with k sharded.
+    Returns Y: (m, n) with m sharded over `axis` (each shard owns its
+    m/P rows of the fully-reduced product) — the backward/row-parallel
+    dual of :func:`ring_allgather_matmul`.
+    """
+    p = mesh.shape[axis]
+
+    def local(x_loc, w_loc):
+        m = x_loc.shape[0]
+        m_loc = m // p
+        idx = lax.axis_index(axis)
+
+        def contrib(b):
+            rows = lax.dynamic_slice(x_loc, (b * m_loc, 0),
+                                     (m_loc, x_loc.shape[1]))
+            return (rows @ w_loc).astype(jnp.float32)
+
+        # The partial-sum buffer for row-block b starts at shard b−1 and
+        # travels b, b+1 … — each visited shard adds its contribution —
+        # arriving fully summed (minus the destination's own term) at
+        # shard b after p−1 hops; each hop's DMA overlaps the next
+        # contribution matmul.
+        own = contrib(idx)
+        if p == 1:
+            return own.astype(x_loc.dtype)
+        buf = contrib((idx - 1) % p)
+
+        def hop(t, buf):
+            buf = lax.ppermute(buf, axis, _ring_perm(p, 1))
+            return buf + contrib((idx - 1 - t) % p)
+
+        buf = lax.fori_loop(1, p - 1, hop, buf)
+        buf = lax.ppermute(buf, axis, _ring_perm(p, 1))
+        return (own + buf).astype(x_loc.dtype)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(axis, None),
+        check_vma=False)
+    return fn(x, w)

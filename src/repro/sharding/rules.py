@@ -1,0 +1,213 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Model parameters carry *logical* axis names (see ``models/common.PSpec``).
+This module maps them onto the physical mesh, with:
+
+* a production default rule set (tensor-parallel over ``model``,
+  replication elsewhere);
+* divisibility checking with graceful fallback to replication (e.g. hymba's
+  25 heads are sharded through the *flattened* ``heads = n_heads·head_dim``
+  dimension, which IS divisible — but a 5-way kv dim over 16 shards falls
+  back or relies on GSPMD uneven sharding, see ``allow_uneven``);
+* ZeRO-1 style extra sharding of optimizer moments over the ``data`` axis;
+* per-arch overrides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Rules", "DEFAULT_RULES", "param_shardings", "batch_sharding",
+           "cache_shardings", "opt_state_shardings", "spec_for_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical → mesh axis map."""
+    table: Mapping[str, str | None] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_TABLE))
+    allow_uneven: bool = False   # let GSPMD pad uneven dims instead of
+    #                              falling back to replication
+    zero1: bool = True           # shard optimizer moments over data axis
+    fsdp: bool = False           # additionally shard params over `data`
+    #                              on their "embed"-class dim (ZeRO-3 /
+    #                              FSDP via GSPMD: per-layer all-gather
+    #                              inside the scan, reduce-scatter grads)
+    batch_axes: tuple[str, ...] = ("pod", "data")
+
+    def mesh_axis(self, logical: str | None) -> str | None:
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+
+FSDP_TABLE: dict[str, str] = {"embed": "data"}
+
+
+DEFAULT_TABLE: dict[str, str | None] = {
+    "vocab": "model",
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",        # flattened n_heads*head_dim
+    "kv_heads": "model",     # flattened n_kv*head_dim
+    "expert": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_conv_dim": "model",
+    "ssm_heads": "model",
+    "q_lora": "model",
+    "kv_lora": None,
+    "conv_in": None,
+    "conv_out": "model",
+    "layers": None,
+}
+
+DEFAULT_RULES = Rules()
+
+
+def spec_for_axes(axes: tuple[str | None, ...], shape: tuple[int, ...],
+                  mesh: Mesh, rules: Rules) -> P:
+    """PartitionSpec for one parameter, checking divisibility."""
+    entries: list[str | None] = []
+    used = set()
+    for dim, logical in zip(shape, axes):
+        axis = rules.mesh_axis(logical)
+        if axis is None or axis not in mesh.shape or axis in used:
+            entries.append(None)
+            continue
+        if dim % mesh.shape[axis] != 0 and not rules.allow_uneven:
+            entries.append(None)     # fallback: replicate this dim
+            continue
+        entries.append(axis)
+        used.add(axis)
+    if rules.fsdp and len(shape) >= 2:
+        for i, (dim, logical) in enumerate(zip(shape, axes)):
+            axis = FSDP_TABLE.get(logical or "")
+            if (axis and axis in mesh.shape and axis not in used
+                    and entries[i] is None
+                    and dim % mesh.shape[axis] == 0):
+                entries[i] = axis
+                used.add(axis)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(mesh: Mesh, axes_tree: Any, shapes_tree: Any,
+                    rules: Rules = DEFAULT_RULES) -> Any:
+    """NamedSharding pytree for the model parameters.
+
+    ``axes_tree`` — logical axes per leaf (``models.transformer.model_axes``);
+    ``shapes_tree`` — matching ShapeDtypeStructs or arrays.
+    """
+    def one(axes, shaped):
+        spec = spec_for_axes(tuple(axes), tuple(shaped.shape), mesh, rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def opt_state_shardings(mesh: Mesh, axes_tree: Any, shapes_tree: Any,
+                        rules: Rules = DEFAULT_RULES) -> Any:
+    """ZeRO-1: moments get the param sharding *plus* data-axis sharding on
+    the first divisible unsharded dim."""
+    def one(axes, shaped):
+        spec = list(spec_for_axes(tuple(axes), tuple(shaped.shape), mesh,
+                                  rules))
+        spec += [None] * (len(shaped.shape) - len(spec))
+        if rules.zero1 and "data" in mesh.shape and "data" not in spec:
+            dp = mesh.shape["data"]
+            for i, (dim, cur) in enumerate(zip(shaped.shape, spec)):
+                if cur is None and dim % dp == 0 and dim >= dp:
+                    spec[i] = "data"
+                    break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_sharding(mesh: Mesh, ndim: int, rules: Rules = DEFAULT_RULES,
+                   batch_dim: int = 0, seq_axis_dim: int | None = None,
+                   seq_axis: str | None = None,
+                   batch_size: int | None = None) -> NamedSharding:
+    """Batch inputs: batch dim over (pod, data); optionally a sequence dim
+    over ``seq_axis`` (long-context decode).  If ``batch_size`` is given
+    and doesn't divide the full axis product, the largest dividing prefix
+    of the batch axes is used (batch=1 long-context → replicated)."""
+    entries: list[Any] = [None] * ndim
+    axes = tuple(a for a in rules.batch_axes if a in mesh.shape)
+    if batch_size is not None:
+        while axes and batch_size % int(
+                np.prod([mesh.shape[a] for a in axes])) != 0:
+            axes = axes[1:]
+    entries[batch_dim] = axes if len(axes) > 1 else (axes[0] if axes
+                                                     else None)
+    if seq_axis_dim is not None and seq_axis in mesh.shape:
+        entries[seq_axis_dim] = seq_axis
+    while entries and entries[-1] is None:
+        entries.pop()
+    return NamedSharding(mesh, P(*entries))
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any,
+                    rules: Rules = DEFAULT_RULES, *,
+                    seq_shard: bool = False) -> Any:
+    """KV/SSM cache shardings.
+
+    Layout per leaf (leading ``layers`` axis from the segment stacking):
+      attn k/v    (L, B, T, Hkv, hd) → (None, batch, [data if seq_shard],
+                                        model-if-divisible, None)
+      mla ckv     (L, B, T, R)       → (None, batch, [data], None)
+      ssm h       (L, B, H, P, N)    → (None, batch, model, None, None)
+      ssm conv    (L, B, W-1, C)     → (None, batch, None, model)
+    """
+    axes = tuple(a for a in rules.batch_axes if a in mesh.shape)
+    batch_entry = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    bs_prod = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    model_div = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        nd = leaf.ndim
+        spec: list[Any] = [None] * nd
+        if not seq_shard and leaf.shape[1] % bs_prod == 0:
+            spec[1] = batch_entry
+        if "k_s" in names or "v_s" in names:       # (L,B,T,H,1) scales
+            if seq_shard and "data" in mesh.shape:
+                spec[2] = "data"
+            if leaf.shape[3] % model_div == 0:
+                spec[3] = "model"
+        elif "k" in names or "v" in names:         # (L,B,T,H,hd)
+            if seq_shard and "data" in mesh.shape:
+                spec[2] = "data"
+            if leaf.shape[3] % model_div == 0:
+                spec[3] = "model"
+            elif leaf.shape[4] % model_div == 0:   # shard head_dim instead
+                spec[4] = "model"
+        elif "ckv" in names or "krope" in names:    # (L,B,T,R)
+            if seq_shard and "data" in mesh.shape:
+                spec[2] = "data"
+        elif "h" in names:                          # (L,B,H,P,N)
+            if leaf.shape[2] % model_div == 0:
+                spec[2] = "model"
+            elif leaf.shape[3] % model_div == 0:
+                spec[3] = "model"
+        elif "conv" in names:                       # (L,B,W-1,C)
+            if leaf.shape[3] % model_div == 0:
+                spec[3] = "model"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,75 @@
+"""Gradient compression for cross-pod (DCN) traffic.
+
+Int8 quantization with per-tensor scale and **error feedback** (the
+residual of each step's quantization is added back before the next step's
+quantization), applied as a ``grad_transform`` hook in
+``make_train_step``.  In the SPMD setting the data-parallel all-reduce is
+emitted by XLA inside backward; quantizing the *averaged* gradient models
+the bandwidth-optimal reduce-scatter(int8)→all-gather(int8) schedule whose
+numerics are what matters for convergence — the wire-format saving itself
+is recorded in the roofline analysis (4× fewer DCN bytes on the pod axis).
+
+``quantize_int8``/``dequantize_int8`` are also used by the serving engine
+for KV-cache compression experiments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ErrorFeedbackState",
+           "make_int8_grad_transform"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_int8_grad_transform(params_template: Any):
+    """Stateful (via closure ref) int8 compression with error feedback.
+
+    Returns (transform, state_ref).  ``transform`` is pure w.r.t. jit when
+    the error state is threaded through the train state — here we keep the
+    simple emulation used by the convergence tests: quantize+dequantize
+    with residual carried in the returned pytree (the caller threads it).
+    """
+    def transform_with_state(grads, err_state):
+        def one(g, e):
+            g32 = g.astype(jnp.float32) + e
+            q, s = quantize_int8(g32)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), g32 - deq
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err_state)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    def init_err():
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_template)
+
+    return transform_with_state, init_err
+
+
+class ErrorFeedbackState:
+    """Convenience holder used by examples (non-jit path)."""
+
+    def __init__(self, params_template):
+        self.transform, init = make_int8_grad_transform(params_template)
+        self.err = init()
+
+    def __call__(self, grads):
+        out, self.err = self.transform(grads, self.err)
+        return out

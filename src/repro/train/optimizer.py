@@ -1,0 +1,100 @@
+"""AdamW (built from scratch) + LR schedules + global-norm clipping.
+
+Optimizer moments are fp32 and carry their own shardings (ZeRO-1: extra
+``data``-axis sharding via ``sharding.rules.opt_state_shardings``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "linear_warmup"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(1, cfg.warmup_steps))
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     jnp.maximum(1, cfg.total_steps - cfg.warmup_steps),
+                     0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+        return cfg.peak_lr * warm * frac
+    return lr
+
+
+def linear_warmup(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        return cfg.peak_lr * jnp.minimum(
+            1.0, step.astype(jnp.float32) / jnp.maximum(1, cfg.warmup_steps))
+    return lr
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_fn: Callable | None = None):
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    lr_fn = lr_fn or cosine_schedule(cfg)
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = lr_fn(count)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / (1 - cfg.b1 ** count.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": tdef.unflatten([o[1] for o in out]),
+        "nu": tdef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, stats

@@ -1,0 +1,450 @@
+"""HLO text cost model: FLOPs, memory bytes, collective bytes — with
+``while``-loop trip-count multipliers.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop body **once** (we
+verified experimentally: a 32-layer scanned transformer reports ~1/32 of
+its true FLOPs), and provides no per-collective breakdown at all.  Since
+every repeated layer stack in this codebase is a ``lax.scan`` (compile-time
+hygiene), an accurate roofline *requires* walking the call graph with trip
+counts — XLA records them in ``backend_config={"known_trip_count":{"n":…}}``.
+
+Model:
+* FLOPs: ``dot`` (2·|result|·contracted) and ``convolution``
+  (2·|result|·K_spatial·C_in/group) ops only — matmul-class work dominates;
+  elementwise FLOPs inside fusions are ignored (they are bandwidth-, not
+  compute-bound).
+* Memory bytes: per top-level op, |result| + Σ|operands| — post-fusion HLO
+  granularity approximates HBM traffic (fusion internals stay in
+  registers/VMEM).
+* Collectives: per kind, bytes = max(|operands|, |result|) per instruction
+  (shard-view), multiplied through loops; all-reduce wire bytes ≈ 2× this
+  for ring algorithms — reported raw, the roofline applies the algorithm
+  factor.  Each collective is tagged ICI vs DCN ("pod"-crossing) by the
+  device-id span of its replica groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Any
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+    "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 0.5, "u4": 0.5, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+# first opcode-like token followed by '(' — robust to tuple types with
+# /*index=N*/ comments and layout annotations
+_INSTR_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+class _OpMatch:
+    __slots__ = ("_groups",)
+
+    def __init__(self, groups):
+        self._groups = groups
+
+    def groups(self):
+        return self._groups
+
+    def group(self, i):
+        return self._groups[i - 1]
+
+
+class _OpRe:
+    """Drop-in for the old regex: returns (name, type_str, instr, rest)."""
+
+    @staticmethod
+    def match(line: str):
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            return None
+        name, rhs = m.groups()
+        im = _INSTR_RE.search(rhs)
+        if not im:
+            return None
+        ty = rhs[: im.start()]
+        instr = im.group(1)
+        rest = rhs[im.end():]
+        return _OpMatch((name, ty, instr, rest))
+
+
+_OP_RE = _OpRe()
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_dcn: float = 0.0
+    calls: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Aggregated per-device cost of the compiled module."""
+    flops: float
+    bytes: float
+    collective_bytes: dict[str, float]
+    collective_dcn_bytes: float
+    n_collectives: dict[str, int]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_json(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_dcn_bytes": self.collective_dcn_bytes,
+            "n_collectives": dict(self.n_collectives),
+        }
+
+
+def _parse_operands(rest: str) -> list[str]:
+    """Operand names from the text after the opening paren."""
+    depth = 1
+    out = []
+    cur = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth == 1 and ch == ",":
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for tok in out:
+        m = re.search(r"%([\w.\-]+)", tok)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _crosses_pod(line: str, pod_stride: int) -> bool:
+    m = re.search(r"replica_groups=\{(\{.*?\})\}", line) or \
+        re.search(r"replica_groups=\{([^{}]*)\}", line)
+    if m:
+        groups = m.group(1)
+        ids = [int(x) for x in re.findall(r"\d+", groups)]
+    else:
+        m = re.search(r"replica_groups=\[\d+,\d+\]<=\[([\d,TS()]*)\]", line)
+        # iota format [G,N]<=[dims] — conservative: check the product span
+        ids = None
+    if m is None:
+        return False
+    if ids is None:
+        # iota replica groups: e.g. [2,256]<=[512] or <=[16,2,16]T(1,0,2)
+        m2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if not m2:
+            return False
+        g, n = int(m2.group(1)), int(m2.group(2))
+        # a group spanning >= pod_stride consecutive-range devices may
+        # cross; precise check needs the permutation — be conservative:
+        return g * n > pod_stride and n > 1 and _iota_spans_pod(
+            line, pod_stride)
+    return any(len({i // pod_stride for i in grp}) > 1
+               for grp in _split_groups(m.group(1)))
+
+
+def _split_groups(s: str) -> list[list[int]]:
+    return [[int(x) for x in re.findall(r"\d+", g)]
+            for g in re.findall(r"\{([^{}]*)\}", "{" + s + "}")
+            ] or [[int(x) for x in re.findall(r"\d+", s)]]
+
+
+def _iota_spans_pod(line: str, pod_stride: int) -> bool:
+    """Decode iota replica groups `[G,N]<=[dims]T(perm)` and test whether
+    any group contains ids from different pods (id // pod_stride)."""
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+        line)
+    if not m:
+        return True  # unknown — assume worst case
+    g, n, dims_s, perm_s = m.groups()
+    g, n = int(g), int(n)
+    dims = [int(x) for x in dims_s.split(",")]
+    total = math.prod(dims)
+    ids = list(range(total))
+    if perm_s:
+        perm = [int(x) for x in perm_s.split(",")]
+        # reshape to dims, transpose by perm, flatten
+        import numpy as np
+        ids = list(np.arange(total).reshape(dims).transpose(perm).ravel())
+    for gi in range(g):
+        grp = ids[gi * n:(gi + 1) * n]
+        pods = {i // pod_stride for i in grp}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "call",
+    "conditional", "custom-call",
+}
+
+# ops that read only the bytes they produce (slicing/expansion), not their
+# full operands — counting full operands would wildly overcount scan-body
+# parameter slicing (full stacked weights × trip count).
+_RESULT_ONLY_OPS = {
+    "dynamic-slice", "slice", "gather", "broadcast", "reshape", "reverse",
+    "pad", "concatenate",
+    # elementwise ops: the CPU backend materializes them standalone, but
+    # TPU fuses them into producers/consumers — count one tensor's worth
+    # (the result) instead of result+operands to avoid systematically
+    # double-counting every op chain (validated: keeps the scan-vs-unroll
+    # equivalence in tests/test_hlo.py).
+    "convert", "multiply", "add", "subtract", "divide", "maximum",
+    "minimum", "negate", "exponential", "tanh", "rsqrt", "sqrt", "log",
+    "select", "compare", "and", "or", "xor", "not", "power", "abs",
+    "sign", "floor", "ceil", "clamp", "round-nearest-even",
+    "round-nearest-afz", "exponential-minus-one", "log-plus-one",
+}
+
+
+def analyze_hlo(hlo_text: str, pod_stride: int = 1 << 62) -> HloCost:
+    """Parse optimized HLO text into per-device cost terms."""
+    # Pass 1: op name → result type string (module-wide; names are unique),
+    # plus raw lines per computation and each computation's sliced params
+    # (parameters consumed only through slicing ops — their true read
+    # volume is ~the slice, not the buffer).
+    shapes: dict[str, str] = {}
+    comp_lines: dict[str, list[str]] = {}
+    entry: str | None = None
+    cur_lines: list[str] | None = None
+    for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            is_entry, name = cm.groups()
+            cur_lines = []
+            comp_lines[name] = cur_lines
+            if is_entry:
+                entry = name
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, ty, _, _ = m.groups()
+            shapes[name] = ty
+            if cur_lines is not None:
+                cur_lines.append(line)
+
+    # parameter-number map + sliced-param detection per computation
+    sliced_params: dict[str, set[int]] = {}
+    param_no: dict[str, dict[str, int]] = {}
+    for cname, lines in comp_lines.items():
+        pnos: dict[str, int] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m and m.group(3) == "parameter":
+                pm = re.search(r"parameter\((\d+)", line)
+                if pm:
+                    pnos[m.group(1)] = int(pm.group(1))
+        param_no[cname] = pnos
+        sliced: set[int] = set()
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m and m.group(3) in ("dynamic-slice", "slice", "gather"):
+                for o in _parse_operands(m.group(4)):
+                    if o in pnos:
+                        sliced.add(pnos[o])
+        sliced_params[cname] = sliced
+
+    # computations that are pure elementwise chains (CPU wraps every
+    # elementwise op in a kLoop fusion; TPU would fuse them into
+    # producers/consumers → count result bytes only)
+    _EW_OK = _RESULT_ONLY_OPS | {"parameter", "constant", "tuple",
+                                 "get-tuple-element", "iota", "copy",
+                                 "bitcast"}
+    elementwise_comps: set[str] = set()
+    for cname, lines in comp_lines.items():
+        ops = [m.group(3) for m in (
+            _OP_RE.match(l) for l in lines) if m]
+        if ops and all(o in _EW_OK for o in ops):
+            elementwise_comps.add(cname)
+
+    # Pass 2: per-computation costs.
+    comps: dict[str, _CompCost] = {}
+    for cur_name, lines in comp_lines.items():
+        cur = _CompCost()
+        comps[cur_name] = cur
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, ty, instr, rest = m.groups()
+            _analyze_op(cur, name, ty, instr, rest, line, shapes,
+                        sliced_params, elementwise_comps, pod_stride)
+    # fallthrough to pass 3 below
+    return _resolve(comps, entry)
+
+
+def _analyze_op(cur, name, ty, instr, rest, line, shapes, sliced_params,
+                elementwise_comps, pod_stride):
+        result_bytes = _shape_bytes(ty)
+        operands = _parse_operands(rest)
+        operand_bytes = sum(_shape_bytes(shapes.get(o, ""))
+                            for o in operands)
+
+        if instr == "dot":
+            dt, rdims = _first_shape_dims(ty)
+            lhs_ty = shapes.get(operands[0], "") if operands else ""
+            _, ldims = _first_shape_dims(lhs_ty)
+            cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            contracted = 1
+            if cd and ldims:
+                for idx in cd.group(1).split(","):
+                    if idx:
+                        contracted *= ldims[int(idx)]
+            cur.flops += 2.0 * math.prod(rdims or [0]) * contracted
+        elif instr == "convolution":
+            _, rdims = _first_shape_dims(ty)
+            rhs_ty = shapes.get(operands[1], "") if len(operands) > 1 else ""
+            _, kdims = _first_shape_dims(rhs_ty)
+            dl = re.search(r"dim_labels=\w+_(\w+)->", rest)
+            k_contract = 1
+            if dl and kdims:
+                rhs_labels = dl.group(1)
+                for pos, ch in enumerate(rhs_labels):
+                    if ch != "o":       # spatial dims + 'i'
+                        k_contract *= kdims[pos]
+            cur.flops += 2.0 * math.prod(rdims or [0]) * k_contract
+        elif instr.removesuffix("-start") in COLLECTIVES and \
+                not instr.endswith("-done"):
+            kind = instr.removesuffix("-start")
+            moved = max(result_bytes, operand_bytes)
+            cur.coll[kind] += moved
+            cur.coll.setdefault(kind + "_count", 0)
+            cur.coll[kind + "_count"] += 1
+            if _crosses_pod(line, pod_stride):
+                cur.coll_dcn += moved
+
+        if instr == "while":
+            tc = re.search(r'"known_trip_count"\s*:\s*\{"n":"(\d+)"\}', line)
+            n = float(tc.group(1)) if tc else 1.0
+            body = re.search(r"body=%?([\w.\-]+)", rest)
+            cond = re.search(r"condition=%?([\w.\-]+)", rest)
+            if body:
+                cur.calls.append((body.group(1), n))
+            if cond:
+                cur.calls.append((cond.group(1), n))
+        elif instr in ("call", "async-start"):
+            cal = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", rest)
+            if cal:
+                cur.calls.append((cal.group(1), 1.0))
+        elif instr == "conditional":
+            for cal in re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"true_computation=%?([\w.\-]+)|"
+                    r"false_computation=%?([\w.\-]+))", rest):
+                for c in cal:
+                    for nm in re.findall(r"%?([\w.\-]+)", c):
+                        if nm in ("",):
+                            continue
+                        cur.calls.append((nm, 1.0))
+        elif instr == "fusion":
+            pass  # internals don't touch HBM; dot-fusions not emitted here
+
+        if instr == "dynamic-update-slice":
+            # read-modify-write of the updated region only (in-place alias)
+            upd = _shape_bytes(shapes.get(operands[1], "")) \
+                if len(operands) > 1 else 0.0
+            cur.bytes += 2 * upd
+        elif instr in _RESULT_ONLY_OPS:
+            cur.bytes += result_bytes
+        elif instr == "fusion":
+            cal = re.search(r"calls=%?([\w.\-]+)", rest)
+            if cal and cal.group(1) in elementwise_comps:
+                cur.bytes += result_bytes   # TPU fuses elementwise chains
+                return
+            sliced = sliced_params.get(cal.group(1), set()) if cal else set()
+            b = result_bytes
+            for j, o in enumerate(operands):
+                ob = _shape_bytes(shapes.get(o, ""))
+                if j in sliced:
+                    ob = min(ob, result_bytes)  # reads ~a slice of it
+                b += ob
+            cur.bytes += b
+        elif instr not in _SKIP_BYTES_OPS and instr != "while":
+            cur.bytes += result_bytes + operand_bytes
+
+
+def _resolve(comps, entry):
+    # Pass 3: resolve call graph from ENTRY with multipliers.
+    memo: dict[str, tuple[float, float, dict, float, dict]] = {}
+
+    def resolve(name: str) -> tuple[float, float, dict, float, dict]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, {}, 0.0, {})
+        memo[name] = (0.0, 0.0, {}, 0.0, {})  # cycle guard
+        flops, byts = c.flops, c.bytes
+        coll = {k: v for k, v in c.coll.items()}
+        dcn = c.coll_dcn
+        for callee, mult in c.calls:
+            cf, cb, cc, cd, _ = resolve(callee)
+            flops += mult * cf
+            byts += mult * cb
+            dcn += mult * cd
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+        memo[name] = (flops, byts, coll, dcn, {})
+        return memo[name]
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    flops, byts, coll, dcn, _ = resolve(entry)
+    counts = {k[:-6]: int(v) for k, v in coll.items()
+              if k.endswith("_count")}
+    coll = {k: v for k, v in coll.items() if not k.endswith("_count")}
+    return HloCost(flops=flops, bytes=byts, collective_bytes=coll,
+                   collective_dcn_bytes=dcn, n_collectives=counts)

@@ -1,0 +1,9 @@
+import os
+
+# Tests see the single real CPU device (the dry-run sets its own
+# XLA_FLAGS in subprocesses; see tests/test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

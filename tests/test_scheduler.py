@@ -1,0 +1,111 @@
+"""Property tests for the static GANAX schedule (μop compilation)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import make_schedule, transposed_conv_output_size
+
+geom = st.tuples(
+    st.integers(2, 9),    # in_size
+    st.integers(1, 6),    # kernel
+    st.integers(1, 4),    # stride
+)
+
+
+def _valid(geoms):
+    return all(p < k for (_, k, _), p in geoms)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(2, 9), st.integers(1, 6),
+                          st.integers(1, 4), st.integers(0, 3)),
+                min_size=1, max_size=3))
+def test_phase_partition_covers_output(dims):
+    """Every output position belongs to exactly one phase, and phase-plane
+    sizes sum to the full output (the row reorganization is a bijection)."""
+    dims = [(n, k, s, min(p, k - 1)) for (n, k, s, p) in dims]
+    in_sizes = [d[0] for d in dims]
+    kernel = [d[1] for d in dims]
+    strides = [d[2] for d in dims]
+    pads = [d[3] for d in dims]
+    sched = make_schedule(in_sizes, kernel, strides, pads)
+    for d, dim_phases in enumerate(sched.dims):
+        covered = []
+        for pd in dim_phases:
+            covered.extend(range(pd.phase, sched.out_sizes[d],
+                                 strides[d]))
+            assert pd.out_size == len(
+                range(pd.phase, sched.out_sizes[d], strides[d]))
+        assert sorted(covered) == list(range(sched.out_sizes[d]))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(2, 9), st.integers(1, 6),
+                          st.integers(1, 4), st.integers(0, 3)),
+                min_size=1, max_size=3))
+def test_taps_are_residue_classes(dims):
+    """Phase taps are exactly {k : k ≡ (φ+p) mod s} — the filter-row
+    reorganization groups."""
+    dims = [(n, k, s, min(p, k - 1)) for (n, k, s, p) in dims]
+    sched = make_schedule([d[0] for d in dims], [d[1] for d in dims],
+                          [d[2] for d in dims], [d[3] for d in dims])
+    for d, dim_phases in enumerate(sched.dims):
+        k, s, p = sched.kernel[d], sched.strides[d], sched.paddings[d]
+        for pd in dim_phases:
+            expect = [t for t in range(k) if (t - (pd.phase + p)) % s == 0]
+            assert list(pd.taps) == expect
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 6), st.integers(1, 4),
+       st.integers(0, 3), st.integers(1, 32), st.integers(1, 32))
+def test_mac_counts(n, k, s, p, cin, cout):
+    p = min(p, k - 1)
+    sched = make_schedule((n, n), (k, k), (s, s), (p, p))
+    conseq = sched.consequential_macs(cin, cout)
+    total = sched.zero_inserted_macs(cin, cout)
+    assert 0 <= conseq <= total
+    if s == 1:
+        assert conseq == total          # SIMD mode: nothing skipped
+        assert sched.inconsequential_fraction() == 0.0
+    # brute-force consequential count
+    out = transposed_conv_output_size(n, k, s, p)
+    brute = 0
+    for oy in range(out):
+        for ox in range(out):
+            ty = len([t for t in range(k)
+                      if (oy + p - t) % s == 0])
+            tx = len([t for t in range(k)
+                      if (ox + p - t) % s == 0])
+            brute += ty * tx
+    assert conseq == brute * cin * cout
+
+
+def test_paper_example():
+    """The paper's running example: 4×4 input, 5×5 kernel, s=2, p=2
+    (Fig. 4/5): two row patterns, taps {0,2,4} and {1,3}."""
+    sched = make_schedule((4, 4), (5, 5), (2, 2), (2, 2))
+    y = sched.dims[0]
+    assert y[0].taps == (0, 2, 4) and y[1].taps == (1, 3)
+    assert sched.out_sizes == (7, 7)
+    # ~73.6% of baseline MACs are inconsequential for this geometry
+    assert 0.70 < sched.inconsequential_fraction() < 0.78
+
+
+def test_tap_tables_padded_consistent():
+    sched = make_schedule((4, 4), (5, 5), (2, 2), (2, 2))
+    t = sched.tap_tables()
+    assert t["n_taps"].sum() == sum(
+        int(np.prod([pd.n_taps for pd in sched.phase_dims(i)]))
+        for i in range(sched.n_phases))
+    assert (t["tap_dx"] >= 0).all()
+    # longest-first ordering
+    assert list(t["n_taps"]) == sorted(t["n_taps"], reverse=True)
+
+
+def test_invalid_geometry_raises():
+    with pytest.raises(ValueError):
+        make_schedule((4,), (3,), (2,), (3,))   # p >= k
+    with pytest.raises(ValueError):
+        make_schedule((4, 4), (3,), (2, 2), (0, 0))  # rank mismatch

@@ -1,0 +1,99 @@
+"""ISA-level validation: the GANAX machine (strided index generators +
+address-free execute μops) reproduces the reference transposed conv
+exactly, executes only consequential MACs, and beats the conventional
+(zero-inserted) dataflow run on the *same* machine."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import make_schedule
+from repro.core.tconv import tconv_ganax, zero_insert
+from repro.core.uop import (GanaxMachine, StridedIndexGenerator,
+                            run_tconv_on_machine)
+
+CASES = [
+    (4, 4, 5, 2, 2, 4, 4),
+    (4, 4, 4, 2, 1, 2, 3),
+    (5, 3, 3, 3, 1, 4, 2),
+    (6, 6, 3, 1, 1, 4, 4),
+    (8, 8, 2, 2, 0, 4, 4),
+]
+
+
+def _ref(x, w, s, p):
+    out = tconv_ganax(jnp.asarray(x[None, :, :, None], jnp.float32),
+                      jnp.asarray(w[:, :, None, None], jnp.float32),
+                      (s, s), (p, p))
+    return np.asarray(out)[0, :, :, 0]
+
+
+@pytest.mark.parametrize("h,w_,k,s,p,npv,npe", CASES)
+def test_machine_exact(h, w_, k, s, p, npv, npe):
+    rng = np.random.default_rng(h * 100 + k * 10 + s)
+    x = rng.normal(size=(h, w_))
+    w = rng.normal(size=(k, k))
+    sched = make_schedule((h, w_), (k, k), (s, s), (p, p))
+    out, stats = run_tconv_on_machine(x, w, sched, n_pvs=npv,
+                                      pes_per_pv=npe)
+    np.testing.assert_allclose(out, _ref(x, w, s, p), atol=1e-6,
+                               rtol=1e-6)
+    # fine-grain zero skipping: executed MACs == consequential MACs
+    assert stats["macs"] == sched.consequential_macs(1, 1)
+
+
+def test_machine_beats_conventional_dataflow():
+    """Speedup at ISA level: run the conventional dataflow (zero-inserted
+    input, all taps) through the same machine and compare MAC cycles."""
+    rng = np.random.default_rng(0)
+    h, k, s, p = 8, 4, 2, 1
+    x = rng.normal(size=(h, h))
+    w = rng.normal(size=(k, k))
+    sched = make_schedule((h, h), (k, k), (s, s), (p, p))
+    _, ganax = run_tconv_on_machine(x, w, sched, n_pvs=4, pes_per_pv=4)
+
+    # conventional: dense conv over the explicitly zero-inserted input
+    xe = np.asarray(zero_insert(
+        jnp.asarray(x[None, :, :, None]), (s, s)))[0, :, :, 0]
+    sched_base = make_schedule(xe.shape, (k, k), (1, 1), (p, p))
+    out_base, base = run_tconv_on_machine(xe, w, sched_base, n_pvs=4,
+                                          pes_per_pv=4)
+    assert base["macs"] == sched.zero_inserted_macs(1, 1)
+    speedup = base["macs"] / ganax["macs"]
+    assert speedup > 2.0   # 4×4 stride-2 → ~75% inconsequential
+    # and the baseline run computes the same function
+    np.testing.assert_allclose(out_base, _ref(x, w, s, p), atol=1e-6,
+                               rtol=1e-6)
+
+
+def test_index_generator_semantics():
+    g = StridedIndexGenerator()
+    g.configure("addr", 2)
+    g.configure("step", 3)
+    g.configure("end", 11)
+    g.configure("repeat", 2)
+    g.configure("offset", 100)
+    g.start()
+    seq = [g.emit() for _ in range(6)]
+    # 2,5,8 wrap → 0,3,6 wrap? 2+3k mod 11: 2,5,8,(11→0),3,6,(9...)
+    assert seq == [102, 105, 108, 100, 103, 106]
+    g2 = StridedIndexGenerator()
+    g2.configure("repeat", 1)
+    g2.configure("end", 2)
+    g2.configure("step", 1)
+    g2.start()
+    g2.emit()
+    g2.emit()
+    assert not g2.running
+    with pytest.raises(RuntimeError):
+        g2.emit()
+
+
+def test_machine_utilization_reported():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(8, 8))
+    w = rng.normal(size=(4, 4))
+    sched = make_schedule((8, 8), (4, 4), (2, 2), (1, 1))
+    _, st = run_tconv_on_machine(x, w, sched, n_pvs=2, pes_per_pv=2)
+    assert 0.0 < st["utilization"] <= 1.0
+    assert len(st["pv_cycles"]) == 2
