@@ -16,7 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.gans import GAN_MODELS
-from repro.core.tconv import tconv_ganax, tconv_zero_insert
+from repro.core.dataflow import DataflowPolicy, tconv, uop_cache_info
+
+GANAX = DataflowPolicy(backend="polyphase")
+BASELINE = DataflowPolicy(backend="zero-insert")
 
 
 def _time(fn, *args, iters=5):
@@ -31,6 +34,7 @@ def _time(fn, *args, iters=5):
 
 def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25):
     rows = []
+    cache0 = uop_cache_info()
     print("\n== microbench: GANAX vs zero-insertion dataflow "
           f"(batch={batch}, channels×{channel_scale}) ==")
     for name in models:
@@ -46,10 +50,10 @@ def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25):
                             jnp.float32)
             w = jnp.asarray(rng.normal(
                 size=(*l.kernel, cin, cout)), jnp.float32)
-            f_g = jax.jit(lambda x, w, l=l: tconv_ganax(
-                x, w, l.strides, l.paddings))
-            f_z = jax.jit(lambda x, w, l=l: tconv_zero_insert(
-                x, w, l.strides, l.paddings))
+            f_g = jax.jit(lambda x, w, l=l: tconv(
+                x, w, l.strides, l.paddings, policy=GANAX))
+            f_z = jax.jit(lambda x, w, l=l: tconv(
+                x, w, l.strides, l.paddings, policy=BASELINE))
             tg += _time(f_g, x, w)
             tz += _time(f_z, x, w)
         speed = tz / tg if tg else float("nan")
@@ -59,18 +63,21 @@ def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25):
                      "zero-elimination, measured"))
         print(f"  {name:8s} ganax={tg*1e3:7.2f}ms  zero_insert="
               f"{tz*1e3:7.2f}ms  speedup={speed:4.2f}x")
+    info = uop_cache_info()
+    print(f"  μop cache: {info['hits'] - cache0['hits']} hits / "
+          f"{info['misses'] - cache0['misses']} misses (this bench)")
     return rows
 
 
 def bench_kernel_interpret():
     """Sanity timing of the Pallas kernel in interpret mode (correctness
     path; not a perf number)."""
-    from repro.kernels.ops import ganax_conv_transpose
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(1, 8, 8, 128)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(4, 4, 128, 128)), jnp.float32)
+    policy = DataflowPolicy(backend="pallas-interpret")
     t0 = time.perf_counter()
-    out = ganax_conv_transpose(x, w, (2, 2), (1, 1), interpret=True)
+    out = tconv(x, w, (2, 2), (1, 1), policy=policy)
     jax.block_until_ready(out)
     dt = time.perf_counter() - t0
     print(f"\n  pallas-interpret tconv 8x8x128→16x16x128: {dt*1e3:.1f}ms "

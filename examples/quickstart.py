@@ -1,19 +1,25 @@
 """Quickstart: train a tiny DCGAN with the GANAX dataflow on CPU.
 
-Every transposed convolution in the generator runs through the paper's
-polyphase (zero-eliminated) dataflow.  Runs in ~a minute::
+Every (transposed) convolution runs through the unified dataflow dispatch
+(`core.dataflow`); pick the execution path with ``--backend``
+(``polyphase`` by default; ``pallas-interpret`` exercises the kernel
+semantics, ``zero-insert`` is the conventional-accelerator baseline).
+Training runs under the fault-tolerant ``TrainLoop`` and finishes with a
+batch of served samples from ``serve.gan.GanServer``::
 
     PYTHONPATH=src python examples/quickstart.py --steps 30
 """
 
 import argparse
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.gan import GanConfig, gan_losses, init_gan
+from repro.serve.gan import GanServer
+from repro.train.loop import LoopConfig, TrainLoop
 
 
 def synthetic_reals(key, batch):
@@ -35,14 +41,20 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=4e-3)
     ap.add_argument("--channel-scale", type=float, default=0.0625)
+    ap.add_argument("--backend", default="polyphase",
+                    help="dataflow backend (polyphase | zero-insert | "
+                         "pallas | pallas-interpret)")
     args = ap.parse_args()
 
     cfg = GanConfig(name="dcgan", channel_scale=args.channel_scale,
-                    dataflow="ganax")
+                    backend=args.backend)
     g_params, d_params = init_gan(cfg, jax.random.PRNGKey(0))
 
     @jax.jit
-    def train_step(g_params, d_params, z, real):
+    def train_step(state, batch):
+        g_params, d_params = state
+        z, real = batch["z"], batch["real"]
+
         def d_loss(d):
             _, dl, _ = gan_losses(g_params, d, z, real, cfg)
             return dl
@@ -57,21 +69,29 @@ def main():
         gl, g_grads = jax.value_and_grad(g_loss)(g_params)
         g_new = jax.tree.map(lambda p, gr: p - args.lr * 5 * gr,
                              g_params, g_grads)
-        return g_new, d_new, gl, dl
+        return (g_new, d_new), {"g_loss": gl, "d_loss": dl,
+                                "loss": gl + dl}
 
-    key = jax.random.PRNGKey(1)
+    def batch_fn(step):
+        # pure function of step → exact replay after any restart
+        kz, kr = jax.random.split(jax.random.PRNGKey(step))
+        return {"z": jax.random.normal(kz, (args.batch, cfg.z_dim)),
+                "real": synthetic_reals(kr, args.batch)}
+
     t0 = time.time()
-    for step in range(args.steps):
-        key, kz, kr = jax.random.split(key, 3)
-        z = jax.random.normal(kz, (args.batch, cfg.z_dim))
-        real = synthetic_reals(kr, args.batch)
-        g_params, d_params, gl, dl = train_step(g_params, d_params, z,
-                                                real)
-        if step % 5 == 0:
-            print(f"step {step:3d}  g_loss={float(gl):6.3f} "
-                  f"d_loss={float(dl):6.3f}  ({time.time()-t0:5.1f}s)")
-    print(f"done: {args.steps} adversarial steps through the GANAX "
-          f"polyphase dataflow in {time.time()-t0:.1f}s")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        loop = TrainLoop(
+            LoopConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                       ckpt_every=max(10, args.steps // 2), log_every=5),
+            train_step, batch_fn, (g_params, d_params))
+        g_params, d_params = loop.run()
+    print(f"done: {args.steps} adversarial steps through the "
+          f"{args.backend} dataflow in {time.time()-t0:.1f}s")
+
+    server = GanServer(cfg, g_params, batch_size=args.batch)
+    imgs = server.generate(3)
+    print(f"served {imgs.shape[0]} samples {imgs.shape[1:]} "
+          f"in {server.batches_served} batch(es)")
 
 
 if __name__ == "__main__":

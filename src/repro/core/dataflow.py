@@ -1,0 +1,502 @@
+"""Unified dataflow dispatch for the GANAX (transposed-)convolution ops.
+
+This module is the single entry point to every executable dataflow in the
+repo.  It owns three things:
+
+1. **Backend registry** — the four execution paths (``pallas-tpu``,
+   ``pallas-interpret``, ``polyphase``, ``zero-insert``) are registered
+   :class:`Backend` objects; callers select them with one
+   :class:`DataflowPolicy` value (auto-selection by platform/ndim, an
+   explicit override, or a per-call escape hatch) instead of the old
+   scattered ``use_pallas``/``force_pallas`` booleans.
+
+2. **μop compilation cache** — the static "μop compilation" stage
+   (``PhaseSchedule`` construction, tap tables, per-phase weight-gather
+   indices, the uniform padding plan) is pure geometry and used to be
+   recomputed on every trace.  :func:`compile_uops` /
+   :func:`compile_conv_uops` hoist it behind an LRU cache keyed on
+   ``(in_spatial, kernel, strides, paddings)`` returning frozen numpy
+   artifacts, so repeated layers and re-traces (train step, serve engine,
+   benchmark sweeps) pay the scheduler once.
+
+3. **Custom VJP** — on the kernel backends, :func:`tconv` /
+   :func:`conv` carry a ``jax.custom_vjp`` exploiting the conv/tconv
+   adjoint duality: the input-cotangent of a stride-``s`` transposed
+   conv is a stride-``s`` plain conv with channel-swapped kernel (and
+   vice versa), so the input-gradient re-enters the *same* unified
+   kernel with a derived schedule (the weight gradient is a dense
+   tap-indexed contraction with no inserted zeros, computed on the XLA
+   path — see ``_tconv_wgrad``).  This makes the Pallas kernel (which
+   has no autodiff rule) trainable, and keeps zero-skipping in both the
+   forward and backward passes.  The pure-JAX backends keep XLA's
+   native autodiff, which is already fused (and, for polyphase,
+   already zero-skipping — the backward of a phase conv is a phase
+   conv).
+
+Geometry semantics are PyTorch ``ConvTranspose`` / correlation-conv
+throughout (channels-last ``x``, ``(K..., Cin, Cout)`` weights), matching
+``core.tconv`` and ``core.scheduler``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import PhaseSchedule, make_schedule
+from repro.core.tconv import tconv_ganax, tconv_zero_insert
+
+__all__ = [
+    "Backend",
+    "DataflowPolicy",
+    "pallas_kernel_supported",
+    "CompiledUops",
+    "ConvUops",
+    "register_backend",
+    "available_backends",
+    "compile_uops",
+    "compile_conv_uops",
+    "uop_cache_info",
+    "uop_cache_clear",
+    "tconv",
+    "conv",
+]
+
+
+# ---------------------------------------------------------------------------
+# μop compilation cache (frozen static artifacts, keyed on geometry).
+# ---------------------------------------------------------------------------
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    a = np.ascontiguousarray(a)
+    a.setflags(write=False)
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledUops:
+    """Frozen static schedule artifacts for one tconv geometry.
+
+    ``schedule`` serves every backend; the remaining fields are the
+    kernel-ready "local μop buffer" contents for the 2-D Pallas path
+    (``None`` for other ranks): flattened tap tables, per-phase
+    weight-gather indices, and the uniform input padding plan.
+    """
+
+    schedule: PhaseSchedule
+    # -- Pallas prep (2-D only) ---------------------------------------------
+    n_taps: np.ndarray | None       # (P,)
+    tap_dy: np.ndarray | None       # (P, T)
+    tap_dx: np.ndarray | None       # (P, T)
+    k_idx: np.ndarray | None        # (P, T) flattened kernel tap index
+    valid: np.ndarray | None        # (P, T) tap-validity mask
+    pad: tuple[tuple[int, int], ...] | None   # per-spatial-dim input padding
+    q_sizes: tuple[int, ...] | None           # phase-plane grid (ceil(out/s))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvUops:
+    """Frozen single-phase (SIMD-mode) tables for a plain strided conv."""
+
+    out_sizes: tuple[int, ...]
+    n_taps: np.ndarray              # (1,)
+    tap_dy: np.ndarray              # (1, KH*KW)
+    tap_dx: np.ndarray              # (1, KH*KW)
+    pad: tuple[tuple[int, int], ...]
+
+
+@functools.lru_cache(maxsize=512)
+def compile_uops(in_spatial: tuple[int, ...], kernel: tuple[int, ...],
+                 strides: tuple[int, ...], paddings: tuple[int, ...]
+                 ) -> CompiledUops:
+    """Run the static μop compilation once per layer geometry."""
+    sched = make_schedule(in_spatial, kernel, strides, paddings)
+    if sched.n_dims != 2:
+        return CompiledUops(schedule=sched, n_taps=None, tap_dy=None,
+                            tap_dx=None, k_idx=None, valid=None, pad=None,
+                            q_sizes=None)
+    tables = sched.tap_tables()
+    tap_off = tables["tap_dx"]          # (P, T, 2)
+    tap_k = tables["tap_k"]             # (P, T, 2)
+    n_taps = tables["n_taps"]           # (P,)
+    t_max = tap_off.shape[1]
+
+    kh, kw = kernel
+    k_idx = tap_k[..., 0] * kw + tap_k[..., 1]                # (P, T)
+    valid = np.arange(t_max)[None, :] < n_taps[:, None]
+    k_idx = np.where(valid, k_idx, 0)
+
+    # Uniform padding, extended so every (dy + q) window slice stays in
+    # bounds (the kernel walks phase planes with unit window stride).
+    q_sizes = tuple(-(-o // s) for o, s in zip(sched.out_sizes, strides))
+    (py_lo, py_hi), (px_lo, px_hi) = sched.uniform_padding()
+    need_y = int(tap_off[..., 0].max()) + (q_sizes[0] - 1) + 1
+    need_x = int(tap_off[..., 1].max()) + (q_sizes[1] - 1) + 1
+    hp0 = in_spatial[0] + py_lo + py_hi
+    wp0 = in_spatial[1] + px_lo + px_hi
+    pad = ((py_lo, py_hi + max(0, need_y - hp0)),
+           (px_lo, px_hi + max(0, need_x - wp0)))
+    return CompiledUops(
+        schedule=sched,
+        n_taps=_frozen(n_taps),
+        tap_dy=_frozen(tap_off[..., 0]),
+        tap_dx=_frozen(tap_off[..., 1]),
+        k_idx=_frozen(k_idx.astype(np.int32)),
+        valid=_frozen(valid),
+        pad=pad,
+        q_sizes=q_sizes,
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def compile_conv_uops(in_spatial: tuple[int, int], kernel: tuple[int, int],
+                      strides: tuple[int, int], paddings: tuple[int, int]
+                      ) -> ConvUops:
+    """Single-phase tap tables for a 2-D plain conv (the paper's SIMD
+    mode: one microprogram whose taps are the full kernel)."""
+    kh, kw = kernel
+    sy, sx = strides
+    py, px = paddings
+    h, w = in_spatial
+    qy = (h + 2 * py - kh) // sy + 1
+    qx = (w + 2 * px - kw) // sx + 1
+    t_max = kh * kw
+    tap_dy = np.repeat(np.arange(kh), kw)[None, :].astype(np.int32)
+    tap_dx = np.tile(np.arange(kw), kh)[None, :].astype(np.int32)
+    need_y = (kh - 1) + (qy - 1) * sy + 1
+    need_x = (kw - 1) + (qx - 1) * sx + 1
+    pad = ((py, max(0, need_y - (h + py))),
+           (px, max(0, need_x - (w + px))))
+    return ConvUops(out_sizes=(qy, qx),
+                    n_taps=_frozen(np.asarray([t_max], np.int32)),
+                    tap_dy=_frozen(tap_dy), tap_dx=_frozen(tap_dx),
+                    pad=pad)
+
+
+def uop_cache_info() -> dict[str, int]:
+    """Aggregate hit/miss counters over both μop caches."""
+    a, b = compile_uops.cache_info(), compile_conv_uops.cache_info()
+    return {"hits": a.hits + b.hits, "misses": a.misses + b.misses,
+            "currsize": a.currsize + b.currsize}
+
+
+def uop_cache_clear() -> None:
+    compile_uops.cache_clear()
+    compile_conv_uops.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Backend registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One executable dataflow: a tconv and a conv implementation.
+
+    ``tconv`` / ``conv`` take ``(x, w, strides, paddings)`` (plus the
+    resolved ``interpret`` flag for kernel backends) and return the output;
+    ``supports`` gates dispatch on the spatial rank.
+    """
+
+    name: str
+    tconv: Callable[..., jax.Array]
+    conv: Callable[..., jax.Array]
+    supports: Callable[[int], bool] = lambda nd: True
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> None:
+    _BACKENDS[backend.name] = backend
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def pallas_kernel_supported(nd: int) -> bool:
+    """Spatial ranks the Pallas kernel implements (single source of
+    truth for both dispatch and the ops-level guards)."""
+    return nd == 2
+
+
+def _conv_dense(x, w, strides, paddings):
+    from repro.kernels.ref import conv_ref
+    return conv_ref(x, w, strides, paddings)
+
+
+def _tconv_polyphase(x, w, strides, paddings):
+    nd = x.ndim - 2
+    u = compile_uops(x.shape[1:1 + nd], w.shape[:nd], tuple(strides),
+                     tuple(paddings))
+    return tconv_ganax(x, w, strides, paddings, schedule=u.schedule)
+
+
+def _pallas(interpret: bool, transposed: bool):
+    def fn(x, w, strides, paddings):
+        from repro.kernels.ops import ganax_conv, ganax_conv_transpose
+        op = ganax_conv_transpose if transposed else ganax_conv
+        return op(x, w, strides, paddings, interpret=interpret)
+    return fn
+
+
+register_backend(Backend(
+    name="zero-insert", tconv=tconv_zero_insert, conv=_conv_dense))
+register_backend(Backend(
+    name="polyphase", tconv=_tconv_polyphase, conv=_conv_dense))
+register_backend(Backend(
+    name="pallas-interpret", tconv=_pallas(True, True),
+    conv=_pallas(True, False), supports=pallas_kernel_supported))
+register_backend(Backend(
+    name="pallas-tpu", tconv=_pallas(False, True),
+    conv=_pallas(False, False), supports=pallas_kernel_supported))
+
+
+# ---------------------------------------------------------------------------
+# Policy.
+# ---------------------------------------------------------------------------
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowPolicy:
+    """How to pick an execution path for the unified (t)conv ops.
+
+    ``backend``:
+      * ``None`` (auto) — Pallas on TPU for 2-D layers, polyphase
+        otherwise (the production default: interpret-mode Pallas is a
+        correctness tool, not a fast path).
+      * ``"pallas"`` — the unified kernel, interpret off-TPU, with a
+        polyphase fallback for ranks the kernel doesn't support (the
+        legacy ``use_pallas=True`` behavior).
+      * ``"pallas-tpu"`` / ``"pallas-interpret"`` / ``"polyphase"`` /
+        ``"zero-insert"`` — that registered backend exactly (strict:
+        unsupported rank raises).
+
+    ``interpret`` requests the Pallas kernel in interpret (``True``) or
+    compiled (``False``) mode regardless of platform; with an auto or
+    ``"pallas"`` backend it implies the kernel, keeping the polyphase
+    fallback for ranks the kernel doesn't support.  Combined with an
+    explicitly pinned backend it must agree — a contradiction (e.g.
+    ``backend="pallas-tpu", interpret=True``) raises.
+    ``differentiable=True`` (default) guarantees gradients on every
+    backend: the kernel backends — which have no autodiff rule — get the
+    custom VJP; the pure-JAX backends keep XLA's native (already fused,
+    and for polyphase already zero-skipping) autodiff.
+    ``differentiable=False`` drops that guarantee for the kernel
+    backends (forward-only serving/benchmark escape hatch).
+
+    The policy is hashable, so it is safe as a static jit argument and as
+    part of a ``custom_vjp`` nondiff argument.
+    """
+
+    backend: str | None = None
+    interpret: bool | None = None
+    differentiable: bool = True
+
+    @classmethod
+    def from_legacy(cls, dataflow: str = "ganax",
+                    use_pallas: bool = False) -> "DataflowPolicy":
+        """Interpret the historic ``GanConfig`` flag pair.  This is the
+        only place the legacy booleans are given meaning."""
+        if dataflow == "zero_insert":
+            return cls(backend="zero-insert")
+        if dataflow != "ganax":
+            raise ValueError(f"unknown dataflow {dataflow!r}")
+        return cls(backend="pallas") if use_pallas else \
+            cls(backend="polyphase")
+
+    def resolve(self, nd: int) -> str:
+        """Pick the concrete backend name for an ``nd``-spatial op."""
+        name = self.backend
+        if self.interpret is not None and name is None:
+            # an interpret request implies the Pallas kernel (with the
+            # usual rank fallback), not whatever auto would pick
+            name = "pallas"
+        if name is None:
+            name = "pallas-tpu" if (_on_tpu() and
+                                    pallas_kernel_supported(nd)) \
+                else "polyphase"
+        elif name == "pallas":
+            if pallas_kernel_supported(nd):
+                name = "pallas-tpu" if _on_tpu() else "pallas-interpret"
+            else:
+                name = "polyphase"
+        if self.interpret is not None:
+            if self.backend in (None, "pallas"):
+                # preference forms: the interpret request picks the
+                # kernel variant (rank fallback to polyphase untouched)
+                if name.startswith("pallas"):
+                    name = ("pallas-interpret" if self.interpret
+                            else "pallas-tpu")
+            else:
+                # explicit names are strict: a pinned backend that
+                # disagrees with the interpret request is a
+                # contradiction, not an override
+                expected = ("pallas-interpret" if self.interpret
+                            else "pallas-tpu")
+                if name != expected:
+                    raise ValueError(
+                        f"interpret={self.interpret} contradicts "
+                        f"backend={self.backend!r}")
+        if name not in _BACKENDS:
+            raise ValueError(f"unknown dataflow backend {name!r}; "
+                             f"available: {available_backends()}")
+        if not _BACKENDS[name].supports(nd):
+            raise ValueError(f"backend {name!r} does not support "
+                             f"{nd}-D spatial inputs")
+        return name
+
+
+# ---------------------------------------------------------------------------
+# Unified ops + custom VJP.
+# ---------------------------------------------------------------------------
+
+def _run(backend: str, transposed: bool, x, w, strides, paddings):
+    b = _BACKENDS[backend]
+    return (b.tconv if transposed else b.conv)(x, w, strides, paddings)
+
+
+def _swap_io(w: jax.Array) -> jax.Array:
+    """(K..., Cin, Cout) → (K..., Cout, Cin): the adjoint's kernel."""
+    return jnp.swapaxes(w, -1, -2)
+
+
+def _flat_sp(a: jax.Array) -> jax.Array:
+    """(N, *spatial, C) → (N, prod(spatial), C)."""
+    return a.reshape(a.shape[0], -1, a.shape[-1])
+
+
+def _tconv_wgrad(x, g, kernel, strides, paddings):
+    """dL/dw for ``y = tconv(x, w)``:  dw[u,ci,co] = Σ_{n,i} x[n,i,ci] ·
+    g[n, s·i + u - p, co] — a dense tap-indexed contraction with no
+    inserted zeros (every product is a consequential MAC)."""
+    nd = x.ndim - 2
+    in_sp = x.shape[1:1 + nd]
+    gp = jnp.pad(g, ((0, 0),) + tuple((p, p) for p in paddings) + ((0, 0),))
+    xf = _flat_sp(x)
+    rows = []
+    for u in np.ndindex(*kernel):
+        slc = (slice(None),) + tuple(
+            slice(u[d], u[d] + strides[d] * (in_sp[d] - 1) + 1, strides[d])
+            for d in range(nd)) + (slice(None),)
+        rows.append(jnp.einsum("nsc,nso->co", xf, _flat_sp(gp[slc]),
+                               preferred_element_type=jnp.float32))
+    return jnp.stack(rows).reshape(tuple(kernel) + rows[0].shape)
+
+
+def _conv_wgrad(x, g, kernel, strides, paddings):
+    """dL/dw for ``y = conv(x, w)``:  dw[t,ci,co] = Σ_{n,q}
+    x[n, s·q + t - p, ci] · g[n,q,co]."""
+    nd = x.ndim - 2
+    q_sp = g.shape[1:1 + nd]
+    in_sp = x.shape[1:1 + nd]
+    pad = []
+    for d in range(nd):
+        hi = strides[d] * (q_sp[d] - 1) + kernel[d] - 1 - paddings[d] \
+            - (in_sp[d] - 1)
+        pad.append((paddings[d], max(0, hi)))
+    xp = jnp.pad(x, ((0, 0),) + tuple(pad) + ((0, 0),))
+    gf = _flat_sp(g)
+    rows = []
+    for t in np.ndindex(*kernel):
+        slc = (slice(None),) + tuple(
+            slice(t[d], t[d] + strides[d] * (q_sp[d] - 1) + 1, strides[d])
+            for d in range(nd)) + (slice(None),)
+        rows.append(jnp.einsum("nsc,nso->co", _flat_sp(xp[slc]), gf,
+                               preferred_element_type=jnp.float32))
+    return jnp.stack(rows).reshape(tuple(kernel) + rows[0].shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _tconv_diff(backend, strides, paddings, x, w):
+    return _run(backend, True, x, w, strides, paddings)
+
+
+def _tconv_fwd(backend, strides, paddings, x, w):
+    return _run(backend, True, x, w, strides, paddings), (x, w)
+
+
+def _tconv_bwd(backend, strides, paddings, res, g):
+    x, w = res
+    # Adjoint duality: tconv(·, w) is the adjoint of conv(·, swap(w)), so
+    # dx is a plain conv — same stride/padding, same backend, derived
+    # (single-phase) schedule; zero-skipping is preserved because no
+    # zero-inserted tensor is ever formed.
+    dx = _run(backend, False, g, _swap_io(w), strides, paddings)
+    dw = _tconv_wgrad(x, g, w.shape[:x.ndim - 2], strides, paddings)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_tconv_diff.defvjp(_tconv_fwd, _tconv_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _conv_diff(backend, strides, paddings, x, w):
+    return _run(backend, False, x, w, strides, paddings)
+
+
+def _conv_fwd(backend, strides, paddings, x, w):
+    return _run(backend, False, x, w, strides, paddings), (x, w)
+
+
+def _conv_bwd(backend, strides, paddings, res, g):
+    x, w = res
+    nd = x.ndim - 2
+    # dx is a transposed conv (the multi-phase MIMD path) — but the
+    # *uncropped* one: conv with padding p reads input positions
+    # [-p, s·(Q-1)+K-1-p], so the adjoint is tconv with padding 0 shifted
+    # by p, cropped to [0, I) with zero cotangent past the stride tail.
+    dx_full = _run(backend, True, g, _swap_io(w), strides, (0,) * nd)
+    slc = [slice(None)]
+    pad = [(0, 0)]
+    for d in range(nd):
+        i_d = x.shape[1 + d]
+        avail = dx_full.shape[1 + d] - paddings[d]
+        slc.append(slice(paddings[d], paddings[d] + i_d))
+        pad.append((0, max(0, i_d - avail)))
+    slc.append(slice(None))
+    pad.append((0, 0))
+    dx = jnp.pad(dx_full[tuple(slc)], pad)
+    dw = _conv_wgrad(x, g, w.shape[:nd], strides, paddings)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_conv_diff.defvjp(_conv_fwd, _conv_bwd)
+
+
+def tconv(x: jax.Array, w: jax.Array, strides: Sequence[int],
+          paddings: Sequence[int],
+          policy: DataflowPolicy | None = None) -> jax.Array:
+    """Transposed convolution through the unified GANAX dispatch.
+
+    x: (N, *spatial, Cin) channels-last; w: (K..., Cin, Cout).
+    """
+    policy = policy or DataflowPolicy()
+    backend = policy.resolve(x.ndim - 2)
+    strides, paddings = tuple(strides), tuple(paddings)
+    if policy.differentiable and backend.startswith("pallas"):
+        return _tconv_diff(backend, strides, paddings, x, w)
+    return _run(backend, True, x, w, strides, paddings)
+
+
+def conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
+         paddings: Sequence[int],
+         policy: DataflowPolicy | None = None) -> jax.Array:
+    """Plain (strided) convolution through the same dispatch — the paper's
+    SIMD mode; on kernel backends it is the degenerate single-phase case
+    of the very same Pallas kernel."""
+    policy = policy or DataflowPolicy()
+    backend = policy.resolve(x.ndim - 2)
+    strides, paddings = tuple(strides), tuple(paddings)
+    if policy.differentiable and backend.startswith("pallas"):
+        return _conv_diff(backend, strides, paddings, x, w)
+    return _run(backend, False, x, w, strides, paddings)

@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
 
 __all__ = ["flash_attention_pallas"]
 
@@ -101,7 +102,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, block_q=512,
         out_specs=pl.BlockSpec((1, block_q, dv), lambda bh, qi: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, s, dv), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(qf, kf, vf)
     return out.reshape(b, h, s, dv).transpose(0, 2, 1, 3)

@@ -44,6 +44,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 __all__ = ["ganax_conv_kernel", "ganax_conv_pallas"]
 
 
@@ -80,7 +82,7 @@ def ganax_conv_kernel(
             preferred_element_type=jnp.float32)
         return ()
 
-    jax.lax.fori_loop(0, n, tap_body, (), unroll=False)
+    jax.lax.fori_loop(0, n, tap_body, ())
 
     @pl.when(ci == n_cin_tiles - 1)
     def _flush():
@@ -125,7 +127,7 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, p, qy, qx, cout), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary",
                                  "arbitrary"),
         ),

@@ -1,39 +1,36 @@
 """Jit-ready wrappers around the GANAX Pallas kernel.
 
-``ganax_conv_transpose`` / ``ganax_conv`` are the public entry points used
-by the model layer (`models/gan.py`).  They perform the *static* μop
-compilation (via ``core.scheduler``) at trace time — tap tables, uniform
-padding, per-phase weight gathering — then invoke the unified Pallas kernel
-and interleave the phase-major result.
+These are the *kernel backends* of the unified dispatch layer
+(`core.dataflow`): ``ganax_conv_transpose`` / ``ganax_conv`` execute one
+(transposed) convolution through the Pallas MIMD-SIMD kernel, either
+compiled for TPU or in interpret mode (exact semantics, Python speed).
 
-On non-TPU backends the kernel runs in interpret mode (exact semantics,
-Python-speed); set ``force_pallas=False`` to dispatch to the pure-JAX
-polyphase path (`core.tconv.tconv_ganax`) instead, which is the production
-fallback for shapes the kernel doesn't support (3-D, ragged channels).
+They are registered in `core.dataflow` as the ``pallas-tpu`` and
+``pallas-interpret`` backends — model code should not call them directly
+but go through ``dataflow.tconv`` / ``dataflow.conv`` with a
+``DataflowPolicy``, which adds auto-selection (platform/rank), the cached
+μop compilation, and the custom VJP that makes these kernels trainable.
+
+The static μop compilation (tap tables, per-phase weight-gather indices,
+uniform padding plan) comes from ``core.dataflow.compile_uops`` /
+``compile_conv_uops`` — LRU-cached on layer geometry, so retracing a
+repeated layer never re-runs the scheduler.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.scheduler import PhaseSchedule, make_schedule
-from repro.core.tconv import interleave_phases, tconv_ganax
+from repro.core.dataflow import (CompiledUops, compile_conv_uops,
+                                 compile_uops)
+from repro.core.dataflow import pallas_kernel_supported as kernel_supported
+from repro.core.tconv import interleave_phases
 from repro.kernels.ganax_conv import ganax_conv_pallas
 
 __all__ = ["ganax_conv_transpose", "ganax_conv", "kernel_supported"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _channel_blocks(cin: int, cout: int) -> tuple[int, int]:
@@ -43,72 +40,46 @@ def _channel_blocks(cin: int, cout: int) -> tuple[int, int]:
     return bc_in, bc_out
 
 
-def kernel_supported(nd: int) -> bool:
-    return nd == 2
+def _gather_weights(w: jax.Array, u: CompiledUops) -> jax.Array:
+    """Per-phase weight taps (P, T, Cin, Cout); padding taps get zeros.
 
-
-def _prepare(x, w, sched: PhaseSchedule, extra_slice: int,
-             qy: int, qx: int):
-    """Static 'μop compilation': pad input, gather per-phase taps."""
-    tables = sched.tap_tables()
-    p = sched.n_phases
-    t_max = int(tables["tap_dy"].shape[1]) if "tap_dy" in tables else None
-    # tap_tables returns tap_dx with shape (P, T, D); split per dim.
-    tap_off = tables["tap_dx"]  # (P, T, 2)
-    tap_k = tables["tap_k"]     # (P, T, 2)
-    n_taps = tables["n_taps"]   # (P,)
-    t_max = tap_off.shape[1]
-
-    # Uniform padding + extra so every (dy + qy*sy) slice stays in bounds.
-    (py_lo, py_hi), (px_lo, px_hi) = sched.uniform_padding()
-    max_dy = int(tap_off[..., 0].max())
-    max_dx = int(tap_off[..., 1].max())
-    hp_needed = max_dy + extra_slice * (qy - 1) + 1
-    wp_needed = max_dx + extra_slice * (qx - 1) + 1
-    hp0 = x.shape[1] + py_lo + py_hi
-    wp0 = x.shape[2] + px_lo + px_hi
-    pad_y = (py_lo, py_hi + max(0, hp_needed - hp0))
-    pad_x = (px_lo, px_hi + max(0, wp_needed - wp0))
-    x_pad = jnp.pad(x, ((0, 0), pad_y, pad_x, (0, 0)))
-
-    # Gather per-phase weights: (P, T, Cin, Cout); padding taps get zeros.
+    This is the only traced part of the μop prep — it depends on the
+    weight *values*; the gather indices themselves are cached."""
     kh, kw, cin, cout = w.shape
+    p, t_max = u.k_idx.shape
     w_flat = w.reshape(kh * kw, cin, cout)
-    k_idx = tap_k[..., 0] * kw + tap_k[..., 1]           # (P, T)
-    valid = (np.arange(t_max)[None, :] < n_taps[:, None])
-    k_idx = np.where(valid, k_idx, 0)
-    w_taps = jnp.take(w_flat, jnp.asarray(k_idx.reshape(-1)), axis=0)
+    w_taps = jnp.take(w_flat, jnp.asarray(u.k_idx.reshape(-1)), axis=0)
     w_taps = w_taps.reshape(p, t_max, cin, cout)
-    w_taps = jnp.where(jnp.asarray(valid)[:, :, None, None], w_taps, 0)
-    return (x_pad, w_taps, jnp.asarray(n_taps),
-            jnp.asarray(tap_off[..., 0]), jnp.asarray(tap_off[..., 1]))
+    return jnp.where(jnp.asarray(u.valid)[:, :, None, None], w_taps, 0)
 
 
 def ganax_conv_transpose(x: jax.Array, w: jax.Array,
                          strides: Sequence[int], paddings: Sequence[int],
-                         *, interpret: bool | None = None,
-                         force_pallas: bool | None = None) -> jax.Array:
+                         *, interpret: bool | None = None) -> jax.Array:
     """Transposed convolution through the unified GANAX kernel.
 
     x: (N, H, W, Cin) channels-last; w: (KH, KW, Cin, Cout).
     """
     nd = x.ndim - 2
+    if not kernel_supported(nd):
+        raise ValueError(f"the Pallas kernel supports 2-D spatial inputs, "
+                         f"got {nd}-D; route through dataflow.tconv for "
+                         f"automatic fallback")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     strides = tuple(strides)
     paddings = tuple(paddings)
-    sched = make_schedule(x.shape[1:1 + nd], w.shape[:nd], strides, paddings)
-    use_pallas = (kernel_supported(nd) if force_pallas is None
-                  else force_pallas)
-    if not use_pallas:
-        return tconv_ganax(x, w, strides, paddings, schedule=sched)
-    if interpret is None:
-        interpret = not _on_tpu()
+    u = compile_uops(x.shape[1:3], w.shape[:2], strides, paddings)
+    sched = u.schedule
 
-    qy, qx = (-(-o // s) for o, s in zip(sched.out_sizes, strides))
+    qy, qx = u.q_sizes
     cin, cout = w.shape[-2], w.shape[-1]
     bci, bco = _channel_blocks(cin, cout)
-    x_pad, w_taps, n_taps, tap_dy, tap_dx = _prepare(x, w, sched, 1, qy, qx)
+    x_pad = jnp.pad(x, ((0, 0), u.pad[0], u.pad[1], (0, 0)))
+    w_taps = _gather_weights(w, u)
 
-    out_pm = ganax_conv_pallas(x_pad, w_taps, n_taps, tap_dy, tap_dx,
+    out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(u.n_taps),
+                               jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
                                out_strides=(1, 1), qy=qy, qx=qx,
                                block_cin=bci, block_cout=bco,
                                out_dtype=x.dtype, interpret=interpret)
@@ -124,43 +95,29 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
 
 
 def ganax_conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
-               paddings: Sequence[int], *, interpret: bool | None = None,
-               force_pallas: bool | None = None) -> jax.Array:
+               paddings: Sequence[int], *,
+               interpret: bool | None = None) -> jax.Array:
     """Plain (strided) convolution through the same kernel — the paper's
     SIMD mode: a single phase whose taps are the full kernel."""
     nd = x.ndim - 2
+    if not kernel_supported(nd):
+        raise ValueError(f"the Pallas kernel supports 2-D spatial inputs, "
+                         f"got {nd}-D; route through dataflow.conv for "
+                         f"automatic fallback")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     strides = tuple(strides)
     paddings = tuple(paddings)
-    use_pallas = (kernel_supported(nd) if force_pallas is None
-                  else force_pallas)
-    if not use_pallas:
-        from repro.kernels.ref import conv_ref
-        return conv_ref(x, w, strides, paddings)
-    if interpret is None:
-        interpret = not _on_tpu()
+    u = compile_conv_uops(x.shape[1:3], w.shape[:2], strides, paddings)
 
     kh, kw, cin, cout = w.shape
-    sy, sx = strides
-    py, px = paddings
-    h, wdt = x.shape[1], x.shape[2]
-    qy = (h + 2 * py - kh) // sy + 1
-    qx = (wdt + 2 * px - kw) // sx + 1
-    # Single-phase tap tables: all KH·KW taps, offsets are (ky, kx).
-    t_max = kh * kw
-    tap_dy = np.repeat(np.arange(kh), kw)[None, :].astype(np.int32)
-    tap_dx = np.tile(np.arange(kw), kh)[None, :].astype(np.int32)
-    n_taps = np.asarray([t_max], np.int32)
-    # Pad input so slice (dy + (qy-1)*sy + 1) stays in bounds.
-    need_y = (kh - 1) + (qy - 1) * sy + 1
-    need_x = (kw - 1) + (qx - 1) * sx + 1
-    pad_y = (py, max(0, need_y - (h + py)))
-    pad_x = (px, max(0, need_x - (wdt + px)))
-    x_pad = jnp.pad(x, ((0, 0), pad_y, pad_x, (0, 0)))
-    w_taps = w.reshape(1, t_max, cin, cout)
+    qy, qx = u.out_sizes
+    x_pad = jnp.pad(x, ((0, 0), u.pad[0], u.pad[1], (0, 0)))
+    w_taps = w.reshape(1, kh * kw, cin, cout)
     bci, bco = _channel_blocks(cin, cout)
-    out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(n_taps),
-                               jnp.asarray(tap_dy), jnp.asarray(tap_dx),
-                               out_strides=(sy, sx), qy=qy, qx=qx,
+    out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(u.n_taps),
+                               jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
+                               out_strides=tuple(strides), qy=qy, qx=qx,
                                block_cin=bci, block_cout=bco,
                                out_dtype=x.dtype, interpret=interpret)
     return out_pm[:, 0]

@@ -312,13 +312,12 @@ def flash_decode(q, k_cache, v_cache, lengths, *, mesh, seq_axis="data",
         out = num_g / jnp.maximum(den_g, 1e-30)[..., None]
         return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, hd)
 
-    from jax import shard_map
+    from repro.compat import shard_map
     fd = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(None, seq_axis, None, None),
                   P(None, seq_axis, None, None), P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())
     return fd(q, k_cache, v_cache, lengths).astype(q.dtype)
 
 

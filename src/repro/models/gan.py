@@ -1,12 +1,21 @@
 """Executable GAN models (the paper's Table I workloads) on GANAX ops.
 
-Generators run every transposed convolution through the GANAX dataflow
-(`kernels.ops.ganax_conv_transpose`, or the pure-JAX polyphase path —
-identical math, XLA-compiled — when ``use_pallas=False``); discriminators
-run plain convolutions through the same unified op (the paper's SIMD mode).
+Every (transposed) convolution goes through the unified dispatch layer
+(`core.dataflow`): generators run the paper's MIMD-SIMD dataflow for
+their transposed convs, discriminators run plain convolutions through the
+same unified op (the SIMD mode).  The execution path — Pallas kernel on
+TPU, interpret-mode kernel, pure-JAX polyphase, or the zero-insertion
+baseline — is selected by a single :class:`~repro.core.dataflow
+.DataflowPolicy`: set ``GanConfig.backend`` explicitly, or leave it
+``None`` and the legacy ``dataflow``/``use_pallas`` fields are interpreted
+by ``DataflowPolicy.from_legacy`` (their meaning lives in
+``core/dataflow.py``, not here).  All paths are differentiable — the
+dispatch layer's custom VJP re-enters the unified kernel for the backward
+pass — so ``use_pallas=True`` configs train end-to-end.
 
-These power the GAN training examples and the wall-clock microbenchmarks
-(GANAX dataflow vs zero-insertion baseline on identical topologies).
+These power the GAN training examples, the serving engine
+(`serve.gan`), and the wall-clock microbenchmarks (GANAX dataflow vs
+zero-insertion baseline on identical topologies).
 """
 
 from __future__ import annotations
@@ -19,9 +28,9 @@ import jax.numpy as jnp
 
 from repro.configs.gans import GAN_MODELS
 from repro.core.analytical import ConvLayer
-from repro.core.tconv import tconv_ganax, tconv_zero_insert
-from repro.kernels.ops import ganax_conv, ganax_conv_transpose
-from repro.kernels.ref import conv_ref
+from repro.core.dataflow import DataflowPolicy
+from repro.core.dataflow import conv as df_conv
+from repro.core.dataflow import tconv as df_tconv
 from repro.models.common import PSpec, init_params
 
 __all__ = ["GanConfig", "generator_specs", "discriminator_specs",
@@ -33,9 +42,17 @@ __all__ = ["GanConfig", "generator_specs", "discriminator_specs",
 class GanConfig:
     name: str
     z_dim: int = 100
-    dataflow: str = "ganax"     # "ganax" | "zero_insert" (baseline)
-    use_pallas: bool = False    # Pallas kernel vs pure-JAX polyphase
+    dataflow: str = "ganax"     # legacy: "ganax" | "zero_insert"
+    use_pallas: bool = False    # legacy: Pallas kernel vs pure-JAX
     channel_scale: float = 1.0  # shrink channels for CPU-sized runs
+    backend: str | None = None  # explicit DataflowPolicy backend override
+
+    @property
+    def policy(self) -> DataflowPolicy:
+        if self.backend is not None:
+            return DataflowPolicy(backend=self.backend)
+        return DataflowPolicy.from_legacy(dataflow=self.dataflow,
+                                          use_pallas=self.use_pallas)
 
     @property
     def layers(self) -> tuple[list[ConvLayer], list[ConvLayer]]:
@@ -78,7 +95,6 @@ def generator_specs(cfg: GanConfig) -> dict:
 
 def discriminator_specs(cfg: GanConfig) -> dict:
     _, d_layers = cfg.layers
-    last = d_layers[-1]
     return _conv_specs(d_layers, "c")
 
 
@@ -88,18 +104,12 @@ def init_gan(cfg: GanConfig, key: jax.Array):
             init_params(kd, discriminator_specs(cfg)))
 
 
-def _tconv(cfg: GanConfig, x, w, strides, paddings):
-    if cfg.dataflow == "zero_insert":
-        return tconv_zero_insert(x, w, strides, paddings)
-    if cfg.use_pallas and x.ndim == 4:
-        return ganax_conv_transpose(x, w, strides, paddings)
-    return tconv_ganax(x, w, strides, paddings)
-
-
-def generator_apply(params, z, cfg: GanConfig):
+def generator_apply(params, z, cfg: GanConfig,
+                    policy: DataflowPolicy | None = None):
     """z (B, z_dim) → image (B, *spatial, C)."""
     g_layers, _ = cfg.layers
     first = g_layers[0]
+    policy = policy or cfg.policy
     x = z @ params["proj_w"] + params["proj_b"]
     x = x.reshape((z.shape[0],) + tuple(first.in_spatial) + (first.cin,))
     x = jax.nn.relu(x)
@@ -107,26 +117,24 @@ def generator_apply(params, z, cfg: GanConfig):
         w = params[f"t{i}_w"]
         b = params[f"t{i}_b"]
         if l.transposed:
-            x = _tconv(cfg, x, w, l.strides, l.paddings)
+            x = df_tconv(x, w, l.strides, l.paddings, policy=policy)
         else:  # encoder stage inside an encoder-decoder generator
-            x = conv_ref(x, w, l.strides, l.paddings)
+            x = df_conv(x, w, l.strides, l.paddings, policy=policy)
         x = x + b
         x = jnp.tanh(x) if i == len(g_layers) - 1 else jax.nn.relu(x)
     return x
 
 
-def discriminator_apply(params, img, cfg: GanConfig, use_pallas=None):
+def discriminator_apply(params, img, cfg: GanConfig,
+                        policy: DataflowPolicy | None = None):
     """img (B, *spatial, C) → logits (B,)."""
     _, d_layers = cfg.layers
     x = img
-    use_pallas = cfg.use_pallas if use_pallas is None else use_pallas
+    policy = policy or cfg.policy
     for i, l in enumerate(d_layers):
         w = params[f"c{i}_w"]
         b = params[f"c{i}_b"]
-        if use_pallas and x.ndim == 4:
-            x = ganax_conv(x, w, l.strides, l.paddings)
-        else:
-            x = conv_ref(x, w, l.strides, l.paddings)
+        x = df_conv(x, w, l.strides, l.paddings, policy=policy)
         x = x + b
         if i < len(d_layers) - 1:
             x = jax.nn.leaky_relu(x, 0.2)

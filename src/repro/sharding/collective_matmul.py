@@ -27,6 +27,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = ["ring_allgather_matmul", "ring_matmul_reducescatter"]
 
 
@@ -61,11 +63,10 @@ def ring_allgather_matmul(x, w, mesh: Mesh, axis: str = "model"):
         _, out = lax.fori_loop(0, p, body, (x_loc, out))
         return out
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(None, axis)),
-        out_specs=P(None, axis),
-        check_vma=False)
+        out_specs=P(None, axis))
     return fn(x, w)
 
 
@@ -107,9 +108,8 @@ def ring_matmul_reducescatter(x, w, mesh: Mesh, axis: str = "model"):
         buf = lax.ppermute(buf, axis, _ring_perm(p, 1))
         return (own + buf).astype(x_loc.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
-        out_specs=P(axis, None),
-        check_vma=False)
+        out_specs=P(axis, None))
     return fn(x, w)

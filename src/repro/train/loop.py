@@ -33,6 +33,11 @@ class InjectedFailure(RuntimeError):
     pass
 
 
+def _uop_cache_info():
+    from repro.core.dataflow import uop_cache_info
+    return uop_cache_info()
+
+
 @dataclasses.dataclass
 class LoopConfig:
     total_steps: int = 100
@@ -59,6 +64,7 @@ class TrainLoop:
         self.failure_injector = failure_injector
         self.log = log_fn
         self.restarts = 0
+        self._last_saved_step: int | None = None
         self.straggler_events: list[int] = []
         self._ewma: float | None = None
         self._preempted = False
@@ -79,11 +85,15 @@ class TrainLoop:
             ckpt.save(self.state, self.cfg.ckpt_dir, step)
         else:
             ckpt.save_async(self.state, self.cfg.ckpt_dir, step)
+        self._last_saved_step = step
 
     def _restore_latest(self) -> int:
         ckpt.wait_pending()
         step = ckpt.latest_step(self.cfg.ckpt_dir)
         if step is None:
+            # replay is only exact from the step-0 parameters, not from
+            # whatever partially-trained state the failure left behind
+            self.state = self._initial_state
             self.log("[loop] no checkpoint found; restarting from step 0")
             return 0
         self.state = ckpt.restore(self.state, self.cfg.ckpt_dir, step,
@@ -106,11 +116,14 @@ class TrainLoop:
     # -- main ---------------------------------------------------------------
     def run(self, start_step: int = 0) -> Any:
         self._install_sigterm()
+        self._uop_cache0 = _uop_cache_info()
+        self._initial_state = self.state  # immutable tree: reference only
         step = start_step
         while step < self.cfg.total_steps:
             if self._preempted:
                 self.log(f"[loop] SIGTERM: checkpointing at {step}, exiting")
                 self._save(step, sync=True)
+                self._log_uop_cache()
                 return self.state
             try:
                 if self.failure_injector and self.failure_injector(step):
@@ -139,6 +152,23 @@ class TrainLoop:
                 if self.restarts > self.cfg.max_restarts:
                     raise
                 step = self._restore_latest()
-        self._save(self.cfg.total_steps, sync=True)
+        # drain in-flight async saves; *this run* already checkpointed the
+        # final step when total_steps is a multiple of ckpt_every (a stale
+        # file from an earlier run in the same dir doesn't count)
         ckpt.wait_pending()
+        if self._last_saved_step != self.cfg.total_steps:
+            self._save(self.cfg.total_steps, sync=True)
+        self._log_uop_cache()
         return self.state
+
+    def _log_uop_cache(self):
+        """Surface the dataflow μop-cache efficiency over this run:
+        replayed/retraced steps should hit the cache, not re-run the
+        scheduler."""
+        info = _uop_cache_info()
+        hits = info["hits"] - self._uop_cache0["hits"]
+        misses = info["misses"] - self._uop_cache0["misses"]
+        if hits or misses:
+            self.log(f"[loop] dataflow μop cache: {hits} hits / "
+                     f"{misses} misses this run "
+                     f"({info['currsize']} geometries cached)")

@@ -72,14 +72,14 @@ def test_kernel_dtypes(dtype, tol):
 def test_kernel_lowers_to_mosaic():
     """The kernel must lower for the real TPU target (Mosaic MLIR), not
     just run in interpret mode."""
-    import jax.experimental.pallas as pl
+    from repro.compat import lower_as_mlir
     x = jnp.zeros((1, 4, 4, 128), jnp.float32)
     w = jnp.zeros((4, 4, 128, 128), jnp.float32)
 
     def f(x, w):
         return ganax_conv_transpose(x, w, (2, 2), (1, 1), interpret=False)
 
-    mlir = pl.lower_as_mlir(f, x, w)
+    mlir = lower_as_mlir(f, x, w)
     assert "tpu" in str(mlir).lower() or len(str(mlir)) > 100
 
 

@@ -48,10 +48,9 @@ def test_flash_kernel_bf16(dtype, tol):
 
 
 def test_flash_kernel_lowers_to_mosaic():
-    import jax
-    import jax.experimental.pallas as pl
+    from repro.compat import lower_as_mlir
     q = jnp.zeros((1, 512, 2, 128), jnp.float32)
-    mlir = pl.lower_as_mlir(
+    mlir = lower_as_mlir(
         lambda q, k, v: flash_attention_pallas(q, k, v, causal=True,
                                                interpret=False),
         q, q, q)

@@ -6,8 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax import lax
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax import lax  # noqa: E402
 
 from repro.core.scheduler import make_schedule
 from repro.core.tconv import (tconv_ganax, tconv_output_shape,
