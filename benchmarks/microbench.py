@@ -5,10 +5,20 @@ The zero-elimination speedup is algorithmic, so it shows up even on CPU:
 the GANAX path executes only consequential MACs.  (Kernel-level VMEM/MXU
 effects require real TPU hardware; the interpret-mode Pallas kernel is
 validated for correctness in tests/, not timed here.)
+
+Runnable directly with the same knobs the tuner and CI use::
+
+    PYTHONPATH=src python benchmarks/microbench.py \
+        --backends polyphase zero-insert --repeats 5 --models dcgan
+
+``--backends`` accepts any registered dataflow backend plus ``auto``
+(planner-consulting dispatch — tuned when a plan file is warm, heuristic
+otherwise).
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -16,15 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.gans import GAN_MODELS
-from repro.core.dataflow import DataflowPolicy, tconv, uop_cache_info
+from repro.core.dataflow import (DataflowPolicy, available_backends,
+                                 tconv, uop_cache_info)
 
-GANAX = DataflowPolicy(backend="polyphase")
-BASELINE = DataflowPolicy(backend="zero-insert")
+DEFAULT_BACKENDS = ("polyphase", "zero-insert")
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -32,14 +41,21 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25):
+def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
+                    backends=DEFAULT_BACKENDS, repeats=5):
+    """Per-model generator tconv wall-clock for each requested backend.
+
+    Emits ``micro/<model>/<backend>_us`` per backend (dashes become
+    underscores), the legacy ``ganax_us`` alias for the polyphase path,
+    and ``wallclock_speedup`` (zero-insert / polyphase) when both are in
+    the pool — the row names `BENCH_dataflow.json` tracks across PRs."""
     rows = []
     cache0 = uop_cache_info()
-    print("\n== microbench: GANAX vs zero-insertion dataflow "
-          f"(batch={batch}, channels×{channel_scale}) ==")
+    print("\n== microbench: dataflow backends "
+          f"{list(backends)} (batch={batch}, channels×{channel_scale}) ==")
     for name in models:
         g_layers, _ = GAN_MODELS[name]
-        tg = tz = 0.0
+        totals = dict.fromkeys(backends, 0.0)
         for l in g_layers:
             if not l.transposed:
                 continue
@@ -50,19 +66,26 @@ def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25):
                             jnp.float32)
             w = jnp.asarray(rng.normal(
                 size=(*l.kernel, cin, cout)), jnp.float32)
-            f_g = jax.jit(lambda x, w, l=l: tconv(
-                x, w, l.strides, l.paddings, policy=GANAX))
-            f_z = jax.jit(lambda x, w, l=l: tconv(
-                x, w, l.strides, l.paddings, policy=BASELINE))
-            tg += _time(f_g, x, w)
-            tz += _time(f_z, x, w)
-        speed = tz / tg if tg else float("nan")
-        rows.append((f"micro/{name}/ganax_us", tg * 1e6, ""))
-        rows.append((f"micro/{name}/zero_insert_us", tz * 1e6, ""))
-        rows.append((f"micro/{name}/wallclock_speedup", speed,
-                     "zero-elimination, measured"))
-        print(f"  {name:8s} ganax={tg*1e3:7.2f}ms  zero_insert="
-              f"{tz*1e3:7.2f}ms  speedup={speed:4.2f}x")
+            for backend in backends:
+                policy = DataflowPolicy(backend=backend)
+                f = jax.jit(lambda x, w, l=l, policy=policy: tconv(
+                    x, w, l.strides, l.paddings, policy=policy))
+                totals[backend] += _time(f, x, w, iters=repeats)
+        summary = "  ".join(f"{b}={totals[b]*1e3:7.2f}ms"
+                            for b in backends)
+        for backend in backends:
+            rows.append((f"micro/{name}/{backend.replace('-', '_')}_us",
+                         totals[backend] * 1e6, ""))
+        if "polyphase" in totals:
+            rows.append((f"micro/{name}/ganax_us",
+                         totals["polyphase"] * 1e6, "alias of polyphase"))
+        if "polyphase" in totals and "zero-insert" in totals:
+            speed = totals["zero-insert"] / totals["polyphase"] \
+                if totals["polyphase"] else float("nan")
+            rows.append((f"micro/{name}/wallclock_speedup", speed,
+                         "zero-elimination, measured"))
+            summary += f"  speedup={speed:4.2f}x"
+        print(f"  {name:8s} {summary}")
     info = uop_cache_info()
     print(f"  μop cache: {info['hits'] - cache0['hits']} hits / "
           f"{info['misses'] - cache0['misses']} misses (this bench)")
@@ -85,11 +108,31 @@ def bench_kernel_interpret():
     return [("micro/pallas_interpret_us", dt * 1e6, "interpret mode")]
 
 
-def run_all():
-    rows = bench_dataflows()
+def run_all(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
+            backends=DEFAULT_BACKENDS, repeats=5):
+    rows = bench_dataflows(models, batch, channel_scale,
+                           backends=backends, repeats=repeats)
     rows += bench_kernel_interpret()
     return rows
 
 
+def main(argv=None):
+    valid = available_backends() + ("auto",)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--models", nargs="+", default=["dcgan", "3dgan"],
+                    choices=sorted(GAN_MODELS))
+    ap.add_argument("--backends", nargs="+", default=list(DEFAULT_BACKENDS),
+                    choices=sorted(valid),
+                    help="dataflow backends to time")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed iterations per layer (mean reported)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--channel-scale", type=float, default=0.25)
+    args = ap.parse_args(argv)
+    return run_all(models=tuple(args.models), batch=args.batch,
+                   channel_scale=args.channel_scale,
+                   backends=tuple(args.backends), repeats=args.repeats)
+
+
 if __name__ == "__main__":
-    run_all()
+    main()

@@ -9,6 +9,10 @@ import json
 import pathlib
 import sys
 
+# `python benchmarks/run.py` puts benchmarks/ itself on sys.path, not the
+# repo root the `benchmarks.*` imports need — add it.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
 
 def _dataflow_json(rows) -> dict:
     """Pivot the micro/<model>/<metric> rows into {model: {metric: value}}.

@@ -43,7 +43,10 @@ def main():
     ap.add_argument("--channel-scale", type=float, default=0.0625)
     ap.add_argument("--backend", default="polyphase",
                     help="dataflow backend (polyphase | zero-insert | "
-                         "pallas | pallas-interpret)")
+                         "pallas | pallas-interpret | auto — 'auto' "
+                         "consults the repro.tune planner; point "
+                         "REPRO_TUNE_PLANS at a plan file from "
+                         "`python -m repro.tune` for measured plans)")
     args = ap.parse_args()
 
     cfg = GanConfig(name="dcgan", channel_scale=args.channel_scale,

@@ -55,6 +55,7 @@ __all__ = [
     "Backend",
     "DataflowPolicy",
     "pallas_kernel_supported",
+    "backend_supports",
     "CompiledUops",
     "ConvUops",
     "register_backend",
@@ -65,6 +66,7 @@ __all__ = [
     "uop_cache_clear",
     "tconv",
     "conv",
+    "SecondOrderNotImplemented",
 ]
 
 
@@ -220,6 +222,13 @@ def available_backends() -> tuple[str, ...]:
     return tuple(sorted(_BACKENDS))
 
 
+def backend_supports(name: str, nd: int) -> bool:
+    """True when registered backend ``name`` executes ``nd``-spatial ops
+    (used by the autotuner's candidate enumerator and plan validation)."""
+    b = _BACKENDS.get(name)
+    return b is not None and b.supports(nd)
+
+
 def pallas_kernel_supported(nd: int) -> bool:
     """Spatial ranks the Pallas kernel implements (single source of
     truth for both dispatch and the ops-level guards)."""
@@ -239,10 +248,11 @@ def _tconv_polyphase(x, w, strides, paddings):
 
 
 def _pallas(interpret: bool, transposed: bool):
-    def fn(x, w, strides, paddings):
+    def fn(x, w, strides, paddings, blocks=None):
         from repro.kernels.ops import ganax_conv, ganax_conv_transpose
         op = ganax_conv_transpose if transposed else ganax_conv
-        return op(x, w, strides, paddings, interpret=interpret)
+        return op(x, w, strides, paddings, interpret=interpret,
+                  blocks=blocks)
     return fn
 
 
@@ -271,9 +281,19 @@ class DataflowPolicy:
     """How to pick an execution path for the unified (t)conv ops.
 
     ``backend``:
-      * ``None`` (auto) — Pallas on TPU for 2-D layers, polyphase
+      * ``None`` (heuristic) — Pallas on TPU for 2-D layers, polyphase
         otherwise (the production default: interpret-mode Pallas is a
         correctness tool, not a fast path).
+      * ``"auto"`` — measurement-driven: at dispatch time the op consults
+        the autotuning :class:`repro.tune.Planner` for a plan keyed on
+        (layer geometry, dtype, platform); a hit executes the measured
+        best backend *and* its tuned Pallas block shapes, a miss falls
+        back to the ``None`` heuristic.  The planner never measures at
+        dispatch (dispatch may be inside a ``jit`` trace) — plans come
+        from ``python -m repro.tune``, ``GanServer`` construction
+        warmup, or an explicit ``Planner.plan`` call, persisted via the
+        planner's JSON plan file.  Resolution order is therefore
+        *pinned > auto(planned) > heuristic*.
       * ``"pallas"`` — the unified kernel, interpret off-TPU, with a
         polyphase fallback for ranks the kernel doesn't support (the
         legacy ``use_pallas=True`` behavior).
@@ -315,8 +335,18 @@ class DataflowPolicy:
             cls(backend="polyphase")
 
     def resolve(self, nd: int) -> str:
-        """Pick the concrete backend name for an ``nd``-spatial op."""
+        """Pick the concrete backend name for an ``nd``-spatial op.
+
+        Geometry-free resolution: ``backend="auto"`` reports the
+        heuristic choice here (the planner needs full layer geometry,
+        which only the dispatch functions have)."""
         name = self.backend
+        if name == "auto":
+            if self.interpret is not None:
+                raise ValueError(
+                    "interpret cannot be combined with backend='auto': "
+                    "the planner owns the kernel-variant choice")
+            name = None
         if self.interpret is not None and name is None:
             # an interpret request implies the Pallas kernel (with the
             # usual rank fallback), not whatever auto would pick
@@ -360,9 +390,61 @@ class DataflowPolicy:
 # Unified ops + custom VJP.
 # ---------------------------------------------------------------------------
 
-def _run(backend: str, transposed: bool, x, w, strides, paddings):
+class SecondOrderNotImplemented(NotImplementedError):
+    pass
+
+
+_SECOND_ORDER_MSG = (
+    "second-order (and forward-mode) autodiff through the unified GANAX "
+    "(t)conv op is not implemented on the kernel backends: their "
+    "jax.custom_vjp defines a single backward pass, so grad-of-grad "
+    "(hessian, etc.) would need derivatives of the Pallas kernel itself. "
+    "Differentiate through a pure-JAX backend instead — "
+    "DataflowPolicy(backend='polyphase') or 'zero-insert' keep XLA's "
+    "native autodiff, which supports arbitrary-order derivatives.")
+
+
+def _reject_higher_order(x, w) -> None:
+    """Kernel backends have no JVP rule: a JVP tracer reaching one means
+    the custom VJP's single backward pass is itself being differentiated
+    (grad-of-grad) or forward-mode is being applied.  Without this check
+    that surfaces as a bare NotImplementedError from deep inside
+    pallas_call; raise the actionable error instead."""
+    from jax.interpreters import ad
+    if isinstance(x, ad.JVPTracer) or isinstance(w, ad.JVPTracer):
+        raise SecondOrderNotImplemented(_SECOND_ORDER_MSG)
+
+
+def _run(backend: str, transposed: bool, x, w, strides, paddings,
+         blocks=None):
     b = _BACKENDS[backend]
-    return (b.tconv if transposed else b.conv)(x, w, strides, paddings)
+    fn = b.tconv if transposed else b.conv
+    if backend.startswith("pallas"):
+        _reject_higher_order(x, w)
+        return fn(x, w, strides, paddings, blocks=blocks)
+    if blocks is not None:
+        raise ValueError(f"blocks={blocks!r} only applies to the Pallas "
+                         f"kernel backends, not {backend!r}")
+    return fn(x, w, strides, paddings)
+
+
+@jax.custom_vjp
+def _first_order_only(x):
+    """Identity marking the custom-VJP cotangents: differentiating it
+    (i.e. taking a second derivative of the unified op) raises instead of
+    producing silently wrong higher-order terms."""
+    return x
+
+
+def _foo_fwd(x):
+    return x, None
+
+
+def _foo_bwd(_, g):
+    raise SecondOrderNotImplemented(_SECOND_ORDER_MSG)
+
+
+_first_order_only.defvjp(_foo_fwd, _foo_bwd)
 
 
 def _swap_io(w: jax.Array) -> jax.Array:
@@ -416,39 +498,42 @@ def _conv_wgrad(x, g, kernel, strides, paddings):
     return jnp.stack(rows).reshape(tuple(kernel) + rows[0].shape)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _tconv_diff(backend, strides, paddings, x, w):
-    return _run(backend, True, x, w, strides, paddings)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _tconv_diff(backend, strides, paddings, blocks, x, w):
+    return _run(backend, True, x, w, strides, paddings, blocks)
 
 
-def _tconv_fwd(backend, strides, paddings, x, w):
-    return _run(backend, True, x, w, strides, paddings), (x, w)
+def _tconv_fwd(backend, strides, paddings, blocks, x, w):
+    return _run(backend, True, x, w, strides, paddings, blocks), (x, w)
 
 
-def _tconv_bwd(backend, strides, paddings, res, g):
+def _tconv_bwd(backend, strides, paddings, blocks, res, g):
     x, w = res
     # Adjoint duality: tconv(·, w) is the adjoint of conv(·, swap(w)), so
     # dx is a plain conv — same stride/padding, same backend, derived
     # (single-phase) schedule; zero-skipping is preserved because no
-    # zero-inserted tensor is ever formed.
+    # zero-inserted tensor is ever formed.  Tuned blocks describe the
+    # *forward* geometry (the adjoint has its own phase-plane/channel
+    # extents), so the backward pass uses the heuristic defaults.
     dx = _run(backend, False, g, _swap_io(w), strides, paddings)
     dw = _tconv_wgrad(x, g, w.shape[:x.ndim - 2], strides, paddings)
-    return dx.astype(x.dtype), dw.astype(w.dtype)
+    return (_first_order_only(dx.astype(x.dtype)),
+            _first_order_only(dw.astype(w.dtype)))
 
 
 _tconv_diff.defvjp(_tconv_fwd, _tconv_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _conv_diff(backend, strides, paddings, x, w):
-    return _run(backend, False, x, w, strides, paddings)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _conv_diff(backend, strides, paddings, blocks, x, w):
+    return _run(backend, False, x, w, strides, paddings, blocks)
 
 
-def _conv_fwd(backend, strides, paddings, x, w):
-    return _run(backend, False, x, w, strides, paddings), (x, w)
+def _conv_fwd(backend, strides, paddings, blocks, x, w):
+    return _run(backend, False, x, w, strides, paddings, blocks), (x, w)
 
 
-def _conv_bwd(backend, strides, paddings, res, g):
+def _conv_bwd(backend, strides, paddings, blocks, res, g):
     x, w = res
     nd = x.ndim - 2
     # dx is a transposed conv (the multi-phase MIMD path) — but the
@@ -467,36 +552,100 @@ def _conv_bwd(backend, strides, paddings, res, g):
     pad.append((0, 0))
     dx = jnp.pad(dx_full[tuple(slc)], pad)
     dw = _conv_wgrad(x, g, w.shape[:nd], strides, paddings)
-    return dx.astype(x.dtype), dw.astype(w.dtype)
+    return (_first_order_only(dx.astype(x.dtype)),
+            _first_order_only(dw.astype(w.dtype)))
 
 
 _conv_diff.defvjp(_conv_fwd, _conv_bwd)
 
 
+def _planned_dispatch(policy: DataflowPolicy, transposed: bool, x, w,
+                      strides, paddings) -> tuple[str, tuple | None]:
+    """Resolve (backend, blocks) for one dispatch.
+
+    ``backend="auto"`` consults the autotuning planner with the full
+    layer geometry; a hit yields the measured backend + tuned Pallas
+    blocks (stale plans — unknown backend, unsupported rank, blocks on a
+    non-kernel backend — degrade to the heuristic rather than raising).
+    Lookup only: dispatch may run inside a jit trace, where timing is
+    meaningless, so measurement happens in `repro.tune` entry points."""
+    nd = x.ndim - 2
+    if policy.backend != "auto":
+        return policy.resolve(nd), None
+    policy.resolve(nd)  # validates the interpret combination
+    from repro.tune import get_planner, plan_key_for_op
+    planner = get_planner()
+    key = plan_key_for_op("tconv" if transposed else "conv", x, w,
+                          strides, paddings)
+    plan = planner.lookup(key)
+    if plan is not None and plan.backend in _BACKENDS and \
+            _BACKENDS[plan.backend].supports(nd):
+        blocks = plan.blocks if plan.backend.startswith("pallas") else None
+        if blocks is not None and not _blocks_valid(
+                not transposed, x, w, strides, paddings, blocks):
+            blocks = None   # stale blocks (geometry drift): keep the
+            # planned backend, fall back to its default tile shapes
+        return plan.backend, blocks
+    return dataclasses.replace(policy, backend=None).resolve(nd), None
+
+
+def _blocks_valid(is_conv: bool, x, w, strides, paddings, blocks) -> bool:
+    """True when ``blocks`` divides this geometry's kernel extents —
+    a stale plan entry must degrade, never raise from inside a trace."""
+    from repro.kernels.ops import resolve_blocks
+    if is_conv:
+        u = compile_conv_uops(x.shape[1:3], w.shape[:2], strides, paddings)
+        qy = u.out_sizes[0]
+    else:
+        u = compile_uops(x.shape[1:3], w.shape[:2], strides, paddings)
+        qy = u.q_sizes[0]
+    try:
+        resolve_blocks(blocks, qy, int(w.shape[-2]), int(w.shape[-1]))
+    except ValueError:
+        return False
+    return True
+
+
 def tconv(x: jax.Array, w: jax.Array, strides: Sequence[int],
           paddings: Sequence[int],
-          policy: DataflowPolicy | None = None) -> jax.Array:
+          policy: DataflowPolicy | None = None,
+          blocks: Sequence[int] | None = None) -> jax.Array:
     """Transposed convolution through the unified GANAX dispatch.
 
     x: (N, *spatial, Cin) channels-last; w: (K..., Cin, Cout).
+    ``blocks`` pins the Pallas kernel tile shapes
+    (block_qy, block_cin, block_cout) — the per-call escape hatch the
+    autotuner measures through; with ``backend="auto"`` the planner's
+    tuned blocks are used instead.
     """
     policy = policy or DataflowPolicy()
-    backend = policy.resolve(x.ndim - 2)
     strides, paddings = tuple(strides), tuple(paddings)
+    if blocks is not None:
+        backend = policy.resolve(x.ndim - 2)
+    else:
+        backend, blocks = _planned_dispatch(policy, True, x, w, strides,
+                                            paddings)
+    blocks = tuple(blocks) if blocks is not None else None
     if policy.differentiable and backend.startswith("pallas"):
-        return _tconv_diff(backend, strides, paddings, x, w)
-    return _run(backend, True, x, w, strides, paddings)
+        return _tconv_diff(backend, strides, paddings, blocks, x, w)
+    return _run(backend, True, x, w, strides, paddings, blocks)
 
 
 def conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
          paddings: Sequence[int],
-         policy: DataflowPolicy | None = None) -> jax.Array:
+         policy: DataflowPolicy | None = None,
+         blocks: Sequence[int] | None = None) -> jax.Array:
     """Plain (strided) convolution through the same dispatch — the paper's
     SIMD mode; on kernel backends it is the degenerate single-phase case
     of the very same Pallas kernel."""
     policy = policy or DataflowPolicy()
-    backend = policy.resolve(x.ndim - 2)
     strides, paddings = tuple(strides), tuple(paddings)
+    if blocks is not None:
+        backend = policy.resolve(x.ndim - 2)
+    else:
+        backend, blocks = _planned_dispatch(policy, False, x, w, strides,
+                                            paddings)
+    blocks = tuple(blocks) if blocks is not None else None
     if policy.differentiable and backend.startswith("pallas"):
-        return _conv_diff(backend, strides, paddings, x, w)
-    return _run(backend, False, x, w, strides, paddings)
+        return _conv_diff(backend, strides, paddings, blocks, x, w)
+    return _run(backend, False, x, w, strides, paddings, blocks)

@@ -29,10 +29,17 @@ Layout contract (prepared by ``ops.py`` from the `PhaseSchedule`):
   out     (B, P, Qy, Qx, Cout) phase-major output planes (interleaved into
                               the final output by ops.py — a pure layout op)
 
-Tiling: grid = (B, P, Cout/bc, Cin/bk); the full (padded) spatial extent of
-one image is resident in VMEM per step (GAN feature maps are small: ≤ ~70²
-× 128-channel tile ≈ 1.2 MiB in f32).  The MXU contraction is
-(Qy·Qx, Cin)×(Cin, Cout) per tap; channel tiles are 128-aligned.
+Tiling: grid = (B, P, Qy/bq, Cout/bc, Cin/bk); the full (padded) spatial
+extent of one image is resident in VMEM per step (GAN feature maps are
+small: ≤ ~70² × 128-channel tile ≈ 1.2 MiB in f32), while the *output*
+rows are tiled by ``block_qy`` so the accumulator footprint is a free
+parameter.  The MXU contraction is (bq·Qx, Cin)×(Cin, Cout) per tap.
+
+The block shapes (``block_qy``, ``block_cin``, ``block_cout``) are
+tunable parameters, not constants: the autotuning planner
+(``repro.tune``) enumerates the valid divisors for a layer geometry and
+measures them; the defaults (full Qy, 128-aligned channel tiles) are the
+heuristic used when no plan exists.
 """
 
 from __future__ import annotations
@@ -54,11 +61,13 @@ def ganax_conv_kernel(
     n_taps_ref, tap_dy_ref, tap_dx_ref,
     # tensor refs (VMEM blocks)
     x_ref, w_ref, out_ref, acc_ref,
-    *, qy: int, qx: int, sy: int, sx: int, n_cin_tiles: int,
+    *, bqy: int, qx: int, sy: int, sx: int, n_cin_tiles: int,
 ):
-    """One grid step: (batch b, phase p, cout tile, cin tile)."""
+    """One grid step: (batch b, phase p, qy tile, cout tile, cin tile)."""
     ph = pl.program_id(1)
-    ci = pl.program_id(3)
+    qb = pl.program_id(2)
+    ci = pl.program_id(4)
+    row0 = qb * bqy * sy          # first padded-input row of this qy tile
 
     @pl.when(ci == 0)
     def _init():
@@ -69,15 +78,16 @@ def ganax_conv_kernel(
     def tap_body(t, _):
         dy = tap_dy_ref[ph, t]
         dx = tap_dx_ref[ph, t]
-        # Access engine: strided window starting at (dy, dx).  For plain
-        # strided convs (sy/sx > 1) the window is subsampled post-load.
-        xt = x_ref[0, pl.ds(dy, (qy - 1) * sy + 1),
+        # Access engine: strided window starting at (dy + row0, dx).  For
+        # plain strided convs (sy/sx > 1) the window is subsampled
+        # post-load.
+        xt = x_ref[0, pl.ds(dy + row0, (bqy - 1) * sy + 1),
                    pl.ds(dx, (qx - 1) * sx + 1), :]
         xt = xt[::sy, ::sx, :] if (sy > 1 or sx > 1) else xt
         wt = w_ref[0, t]                       # (cin_t, cout_t)
         # Execute engine: MXU contraction over the channel tile.
         acc_ref[...] += jax.lax.dot_general(
-            xt.reshape(qy * qx, xt.shape[-1]), wt,
+            xt.reshape(bqy * qx, xt.shape[-1]), wt,
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         return ()
@@ -86,7 +96,7 @@ def ganax_conv_kernel(
 
     @pl.when(ci == n_cin_tiles - 1)
     def _flush():
-        out_ref[0, 0] = acc_ref[...].reshape(qy, qx, -1).astype(out_ref.dtype)
+        out_ref[0, 0] = acc_ref[...].reshape(bqy, qx, -1).astype(out_ref.dtype)
 
 
 def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
@@ -94,33 +104,39 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
                       tap_dx: jax.Array, out_strides: tuple[int, int],
                       qy: int, qx: int,
                       block_cin: int = 128, block_cout: int = 128,
+                      block_qy: int | None = None,
                       out_dtype=None, interpret: bool = False) -> jax.Array:
     """Invoke the unified kernel.  See module docstring for layout."""
     b, hp, wp, cin = x_pad.shape
     p, t, cin_w, cout = w_taps.shape
+    block_qy = qy if block_qy is None else block_qy
     assert cin_w == cin, (cin_w, cin)
     assert cin % block_cin == 0 and cout % block_cout == 0, \
         (cin, cout, block_cin, block_cout)
+    assert qy % block_qy == 0, (qy, block_qy)
     n_ci = cin // block_cin
     n_co = cout // block_cout
+    n_qb = qy // block_qy
     out_dtype = out_dtype or x_pad.dtype
     sy, sx = out_strides
 
-    grid = (b, p, n_co, n_ci)
-    kernel = functools.partial(ganax_conv_kernel, qy=qy, qx=qx, sy=sy,
-                               sx=sx, n_cin_tiles=n_ci)
+    grid = (b, p, n_qb, n_co, n_ci)
+    kernel = functools.partial(ganax_conv_kernel, bqy=block_qy, qx=qx,
+                               sy=sy, sx=sx, n_cin_tiles=n_ci)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, hp, wp, block_cin),
-                         lambda bi, ph, co, ci, *_: (bi, 0, 0, ci)),
+                         lambda bi, ph, qb, co, ci, *_: (bi, 0, 0, ci)),
             pl.BlockSpec((1, t, block_cin, block_cout),
-                         lambda bi, ph, co, ci, *_: (ph, 0, ci, co)),
+                         lambda bi, ph, qb, co, ci, *_: (ph, 0, ci, co)),
         ],
-        out_specs=pl.BlockSpec((1, 1, qy, qx, block_cout),
-                               lambda bi, ph, co, ci, *_: (bi, ph, 0, 0, co)),
-        scratch_shapes=[pltpu.VMEM((qy * qx, block_cout), jnp.float32)],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_qy, qx, block_cout),
+            lambda bi, ph, qb, co, ci, *_: (bi, ph, qb, 0, co)),
+        scratch_shapes=[pltpu.VMEM((block_qy * qx, block_cout),
+                                   jnp.float32)],
     )
     fn = pl.pallas_call(
         kernel,
@@ -129,7 +145,7 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary",
-                                 "arbitrary"),
+                                 "arbitrary", "arbitrary"),
         ),
     )
     return fn(n_taps, tap_dy, tap_dx, x_pad, w_taps)

@@ -30,7 +30,8 @@ from repro.core.dataflow import pallas_kernel_supported as kernel_supported
 from repro.core.tconv import interleave_phases
 from repro.kernels.ganax_conv import ganax_conv_pallas
 
-__all__ = ["ganax_conv_transpose", "ganax_conv", "kernel_supported"]
+__all__ = ["ganax_conv_transpose", "ganax_conv", "kernel_supported",
+           "default_blocks", "resolve_blocks"]
 
 
 def _channel_blocks(cin: int, cout: int) -> tuple[int, int]:
@@ -38,6 +39,34 @@ def _channel_blocks(cin: int, cout: int) -> tuple[int, int]:
     bc_in = 128 if cin % 128 == 0 else cin
     bc_out = 128 if cout % 128 == 0 else cout
     return bc_in, bc_out
+
+
+def default_blocks(qy: int, cin: int, cout: int) -> tuple[int, int, int]:
+    """The heuristic (block_qy, block_cin, block_cout) used when no tuned
+    plan overrides them: full output-row extent, 128-aligned channels."""
+    return (qy,) + _channel_blocks(cin, cout)
+
+
+def resolve_blocks(blocks, qy: int, cin: int, cout: int
+                   ) -> tuple[int, int, int]:
+    """Validate an explicit (block_qy, block_cin, block_cout) triple, or
+    fall back to :func:`default_blocks` when ``blocks`` is None."""
+    if blocks is None:
+        return default_blocks(qy, cin, cout)
+    try:
+        bqy, bci, bco = (int(v) for v in blocks)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"blocks must be a (block_qy, block_cin, block_cout) triple, "
+            f"got {blocks!r}") from None
+    if bqy <= 0 or qy % bqy != 0:
+        raise ValueError(f"block_qy={bqy} must divide the phase-plane "
+                         f"height qy={qy}")
+    if bci <= 0 or cin % bci != 0:
+        raise ValueError(f"block_cin={bci} must divide cin={cin}")
+    if bco <= 0 or cout % bco != 0:
+        raise ValueError(f"block_cout={bco} must divide cout={cout}")
+    return bqy, bci, bco
 
 
 def _gather_weights(w: jax.Array, u: CompiledUops) -> jax.Array:
@@ -55,10 +84,14 @@ def _gather_weights(w: jax.Array, u: CompiledUops) -> jax.Array:
 
 def ganax_conv_transpose(x: jax.Array, w: jax.Array,
                          strides: Sequence[int], paddings: Sequence[int],
-                         *, interpret: bool | None = None) -> jax.Array:
+                         *, interpret: bool | None = None,
+                         blocks: Sequence[int] | None = None) -> jax.Array:
     """Transposed convolution through the unified GANAX kernel.
 
     x: (N, H, W, Cin) channels-last; w: (KH, KW, Cin, Cout).
+    ``blocks`` optionally pins the kernel tile shapes as a
+    (block_qy, block_cin, block_cout) triple (each must divide its
+    extent); ``None`` uses the heuristic defaults.
     """
     nd = x.ndim - 2
     if not kernel_supported(nd):
@@ -74,14 +107,14 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
 
     qy, qx = u.q_sizes
     cin, cout = w.shape[-2], w.shape[-1]
-    bci, bco = _channel_blocks(cin, cout)
+    bqy, bci, bco = resolve_blocks(blocks, qy, cin, cout)
     x_pad = jnp.pad(x, ((0, 0), u.pad[0], u.pad[1], (0, 0)))
     w_taps = _gather_weights(w, u)
 
     out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(u.n_taps),
                                jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
                                out_strides=(1, 1), qy=qy, qx=qx,
-                               block_cin=bci, block_cout=bco,
+                               block_cin=bci, block_cout=bco, block_qy=bqy,
                                out_dtype=x.dtype, interpret=interpret)
     # out_pm: (B, P, Qy, Qx, Cout) in schedule.phase_order; interleave.
     phase_planes = {}
@@ -96,7 +129,8 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
 
 def ganax_conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
                paddings: Sequence[int], *,
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool | None = None,
+               blocks: Sequence[int] | None = None) -> jax.Array:
     """Plain (strided) convolution through the same kernel — the paper's
     SIMD mode: a single phase whose taps are the full kernel."""
     nd = x.ndim - 2
@@ -114,10 +148,10 @@ def ganax_conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
     qy, qx = u.out_sizes
     x_pad = jnp.pad(x, ((0, 0), u.pad[0], u.pad[1], (0, 0)))
     w_taps = w.reshape(1, kh * kw, cin, cout)
-    bci, bco = _channel_blocks(cin, cout)
+    bqy, bci, bco = resolve_blocks(blocks, qy, cin, cout)
     out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(u.n_taps),
                                jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
                                out_strides=tuple(strides), qy=qy, qx=qx,
-                               block_cin=bci, block_cout=bco,
+                               block_cin=bci, block_cout=bco, block_qy=bqy,
                                out_dtype=x.dtype, interpret=interpret)
     return out_pm[:, 0]

@@ -45,7 +45,10 @@ class GanConfig:
     dataflow: str = "ganax"     # legacy: "ganax" | "zero_insert"
     use_pallas: bool = False    # legacy: Pallas kernel vs pure-JAX
     channel_scale: float = 1.0  # shrink channels for CPU-sized runs
-    backend: str | None = None  # explicit DataflowPolicy backend override
+    # Explicit DataflowPolicy backend override: a registered backend
+    # name, the "pallas" preference, or "auto" (measured per-layer plans
+    # from the repro.tune planner, heuristic fallback on a plan miss).
+    backend: str | None = None
 
     @property
     def policy(self) -> DataflowPolicy:

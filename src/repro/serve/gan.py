@@ -4,15 +4,22 @@ The serving analogue of `serve.engine.DecodeEngine` for the GAN
 workloads: a fixed-batch jitted generator (jit-stable shapes — one trace,
 one μop compilation per layer geometry thanks to the ``core.dataflow``
 cache).  A ``generate(n)`` call rounds work up to full batches and slices
-the tail, so arbitrary request sizes share one compiled executable.
+the tail; ``samples_served`` / ``samples_discarded`` account for every
+sample the generator produced (discarded tail samples are real compute —
+they must be visible to capacity planning, not silently dropped).
 Calls are synchronous and the server is single-threaded: it advances its
 own RNG state per batch, so drive it from one thread (or shard requests
 across servers with distinct seeds).
 
 The execution path is the server's :class:`~repro.core.dataflow
 .DataflowPolicy` (default: the config's own policy; pass
-``DataflowPolicy()`` explicitly for platform auto-selection — Pallas on
-TPU, polyphase elsewhere)."""
+``DataflowPolicy()`` explicitly for platform auto-selection).  With
+``backend="auto"`` the server **warms the autotuning planner on
+construction**: every generator-layer geometry gets a measured plan
+before the first jit trace, so the traced executable runs the tuned
+backends/block shapes (zero measurements when the planner's plan file is
+already warm).  The resolved per-layer plans are exposed in ``repr``.
+"""
 
 from __future__ import annotations
 
@@ -28,7 +35,8 @@ __all__ = ["GanServer"]
 
 class GanServer:
     def __init__(self, cfg: GanConfig, g_params, batch_size: int = 8,
-                 policy: DataflowPolicy | None = None, seed: int = 0):
+                 policy: DataflowPolicy | None = None, seed: int = 0,
+                 warm_plans: bool = True):
         if int(batch_size) <= 0:
             raise ValueError(f"batch_size must be positive, "
                              f"got {batch_size}")
@@ -38,6 +46,14 @@ class GanServer:
         self.policy = policy or cfg.policy
         self.key = jax.random.PRNGKey(seed)
         self.batches_served = 0
+        self.samples_served = 0
+        self.samples_discarded = 0
+        self.plans: dict[str, object] = {}
+        if self.policy.backend == "auto" and warm_plans:
+            from repro.tune import get_planner, warm_gan_plans
+            self.plans = warm_gan_plans(cfg, self.batch_size,
+                                        get_planner(),
+                                        generator_only=True)
 
         @jax.jit
         def _generate(params, z):
@@ -59,6 +75,32 @@ class GanServer:
                                   (self.batch_size, self.cfg.z_dim))
             img = self._generate(self.params, z)
             self.batches_served += 1
-            outs.append(np.asarray(img[:remaining]))
+            take = min(self.batch_size, remaining)
+            self.samples_served += take
+            self.samples_discarded += self.batch_size - take
+            outs.append(np.asarray(img[:take]))
             remaining -= self.batch_size
         return np.concatenate(outs, axis=0)
+
+    def resolved_policy(self) -> str:
+        """Human-readable resolution of this server's policy: the pinned
+        or heuristic backend name, or — for ``backend="auto"`` — the
+        per-layer tuned plans from the construction warmup."""
+        if self.policy.backend != "auto":
+            g_layers, _ = self.cfg.layers
+            return self.policy.resolve(len(g_layers[0].in_spatial))
+        if not self.plans:
+            return "auto(unplanned→heuristic)"
+        per_layer = ", ".join(
+            f"{name.split('/', 1)[1]}→{plan.backend}"
+            + (f"[{'x'.join(map(str, plan.blocks))}]" if plan.blocks
+               else "")
+            for name, plan in self.plans.items())
+        return f"auto({per_layer})"
+
+    def __repr__(self) -> str:
+        return (f"GanServer(model={self.cfg.name!r}, "
+                f"batch_size={self.batch_size}, "
+                f"policy={self.resolved_policy()}, "
+                f"served={self.samples_served}, "
+                f"discarded={self.samples_discarded})")

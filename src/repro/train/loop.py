@@ -38,6 +38,14 @@ def _uop_cache_info():
     return uop_cache_info()
 
 
+def _tune_stats():
+    """Autotuning planner counters, or None when no planner exists (the
+    observer must not create one as a side effect)."""
+    from repro.tune import get_planner
+    planner = get_planner(create=False)
+    return None if planner is None else planner.stats()
+
+
 @dataclasses.dataclass
 class LoopConfig:
     total_steps: int = 100
@@ -117,6 +125,7 @@ class TrainLoop:
     def run(self, start_step: int = 0) -> Any:
         self._install_sigterm()
         self._uop_cache0 = _uop_cache_info()
+        self._tune_stats0 = _tune_stats()
         self._initial_state = self.state  # immutable tree: reference only
         step = start_step
         while step < self.cfg.total_steps:
@@ -172,3 +181,14 @@ class TrainLoop:
             self.log(f"[loop] dataflow μop cache: {hits} hits / "
                      f"{misses} misses this run "
                      f"({info['currsize']} geometries cached)")
+        tune = _tune_stats()
+        if tune is not None:
+            base = self._tune_stats0 or \
+                {"lookups": 0, "hits": 0, "measurements": 0}
+            lookups = tune["lookups"] - base["lookups"]
+            if lookups:
+                self.log(f"[loop] tune planner: {lookups} lookups / "
+                         f"{tune['hits'] - base['hits']} plan hits / "
+                         f"{tune['measurements'] - base['measurements']} "
+                         f"measurements this run "
+                         f"({tune['plans']} plans cached)")

@@ -1,0 +1,62 @@
+"""Autotuning planner subsystem: measured per-layer backend & Pallas
+block-shape selection with persistent plans.
+
+Quick map:
+
+* :mod:`repro.tune.planner` — :class:`Planner` (in-memory + JSON plan
+  file, measurement counters, corrupt/stale fallback), :class:`PlanKey`,
+  :class:`Plan`.
+* :mod:`repro.tune.candidates` — enumerate the (backend × block shape)
+  configurations valid for a layer geometry.
+* :mod:`repro.tune.measure` — warmup + median-of-k timing of one
+  candidate on the unified op.
+* :mod:`repro.tune.zoo` — tune the Table-I GAN model zoo; backs the
+  ``python -m repro.tune`` CLI which writes ``BENCH_tune.json``.
+
+The process-wide planner (:func:`get_planner`) is what
+``DataflowPolicy(backend="auto")`` consults at dispatch time.  Its plan
+file defaults to ``$REPRO_TUNE_PLANS`` (in-memory only when unset);
+install a configured planner with :func:`set_planner`.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.tune.candidates import (Candidate, default_backend_pool,
+                                   enumerate_candidates)
+from repro.tune.measure import (measure_candidate, synthesize_inputs,
+                                time_fn)
+from repro.tune.planner import (PLAN_FORMAT_VERSION, Plan, PlanKey,
+                                Planner, plan_key_for_op)
+from repro.tune.zoo import layer_plan_keys, tune_model_zoo, warm_gan_plans
+
+__all__ = [
+    "Candidate", "Plan", "PlanKey", "Planner", "PLAN_FORMAT_VERSION",
+    "default_backend_pool", "enumerate_candidates", "measure_candidate",
+    "synthesize_inputs", "time_fn", "plan_key_for_op", "layer_plan_keys",
+    "warm_gan_plans", "tune_model_zoo", "get_planner", "set_planner",
+]
+
+_PLANNER: Planner | None = None
+
+
+def get_planner(create: bool = True) -> Planner | None:
+    """The process-wide planner consulted by ``backend="auto"``.
+
+    Created lazily on first use; persists to the path in the
+    ``REPRO_TUNE_PLANS`` environment variable when set (in-memory
+    otherwise).  ``create=False`` returns None instead of creating one —
+    for observers (e.g. the train loop's stats logging) that must not
+    allocate a planner as a side effect."""
+    global _PLANNER
+    if _PLANNER is None and create:
+        _PLANNER = Planner(path=os.environ.get("REPRO_TUNE_PLANS"))
+    return _PLANNER
+
+
+def set_planner(planner: Planner | None) -> Planner | None:
+    """Install (or clear, with None) the process-wide planner."""
+    global _PLANNER
+    _PLANNER = planner
+    return planner

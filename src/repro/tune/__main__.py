@@ -1,0 +1,89 @@
+"""``python -m repro.tune`` — tune the Table-I GAN model zoo and write
+``BENCH_tune.json`` (tuned vs heuristic wall-clock per model).
+
+Typical use::
+
+    PYTHONPATH=src python -m repro.tune                 # whole zoo
+    PYTHONPATH=src python -m repro.tune --models dcgan \
+        --plans /tmp/plans.json --repeats 5
+
+The plan file (``--plans``) is the persistent cache: re-running with a
+warm file performs zero measurements and only re-times the end-to-end
+generators.  Point ``REPRO_TUNE_PLANS`` at the same file so training and
+serving processes pick the plans up with ``backend="auto"``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.configs.gans import GAN_MODELS
+from repro.core.dataflow import available_backends
+from repro.tune.planner import Planner
+from repro.tune.zoo import tune_model_zoo
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="Measure per-layer backend & Pallas block-shape "
+                    "plans for the Table-I GAN model zoo.")
+    ap.add_argument("--models", nargs="+", default=sorted(GAN_MODELS),
+                    choices=sorted(GAN_MODELS),
+                    help="models to tune (default: the whole zoo)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--channel-scale", type=float, default=0.25,
+                    help="shrink channels for CPU-sized measurement")
+    ap.add_argument("--backends", nargs="+", default=None,
+                    help="restrict the candidate backend pool "
+                         f"(registered: {', '.join(available_backends())};"
+                         " default: the platform's fast paths)")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed runs per candidate (median reported)")
+    ap.add_argument("--plans", default=None, metavar="PATH",
+                    help="persistent JSON plan file (default: in-memory)")
+    ap.add_argument("--out", default="BENCH_tune.json", metavar="PATH")
+    ap.add_argument("--no-e2e", action="store_true",
+                    help="skip the end-to-end generator timings")
+    args = ap.parse_args(argv)
+
+    if args.backends:
+        unknown = set(args.backends) - set(available_backends())
+        if unknown:
+            ap.error(f"unknown backends {sorted(unknown)}; "
+                     f"registered: {available_backends()}")
+
+    planner = Planner(args.plans, backends=args.backends,
+                      warmup=args.warmup, repeats=args.repeats)
+    if planner.load_error:
+        print(f"warning: plan file ignored ({planner.load_error})")
+
+    print(f"== repro.tune: {len(args.models)} models, batch={args.batch}, "
+          f"channels×{args.channel_scale} ==")
+    bench = tune_model_zoo(args.models, planner, batch=args.batch,
+                           channel_scale=args.channel_scale,
+                           warmup=args.warmup, repeats=args.repeats,
+                           end_to_end=not args.no_e2e)
+
+    stats = planner.stats()
+    bench["_meta"] = {
+        "batch": args.batch,
+        "channel_scale": args.channel_scale,
+        "repeats": args.repeats,
+        "planner": stats,
+        "plan_file": args.plans,
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(bench, indent=2, sort_keys=True) + "\n")
+    print(f"planner: {stats['plans']} plans, "
+          f"{stats['measurements']} measurements this run")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

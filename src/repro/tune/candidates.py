@@ -1,0 +1,142 @@
+"""Candidate enumeration: (backend × Pallas block shape) configurations
+valid for one layer geometry.
+
+The enumerator is pure geometry — it reuses the cached μop compilation
+(`core.dataflow.compile_uops` / `compile_conv_uops`) to learn the
+phase-plane extents and padding plan, then emits:
+
+* one candidate per eligible **pure-JAX backend** (``polyphase``,
+  ``zero-insert``) — no block shapes to choose;
+* for each eligible **Pallas backend**, the default block shapes first
+  (so the heuristic is always in the measured pool) followed by the
+  valid divisor alternatives of (block_qy, block_cin, block_cout),
+  filtered by a VMEM footprint budget.
+
+Eligibility: a backend must be registered, support the spatial rank, and
+be a *fast path* on the current platform — ``pallas-tpu`` only runs on
+TPU hosts, and interpret-mode Pallas is a correctness tool (Python-speed,
+never a sensible plan), so neither appears in a CPU candidate pool unless
+explicitly requested via ``backends=``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import jax
+
+from repro.core.dataflow import (backend_supports, compile_conv_uops,
+                                 compile_uops)
+from repro.kernels.ops import default_blocks
+from repro.tune.planner import PlanKey
+
+__all__ = ["Candidate", "enumerate_candidates", "default_backend_pool",
+           "VMEM_BUDGET_BYTES"]
+
+# Per-step VMEM footprint ceiling for a candidate (a TPU core has ~16 MiB;
+# leave headroom for double buffering).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+# Most candidates per Pallas backend (default blocks always included).
+MAX_BLOCK_CANDIDATES = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One runnable configuration: backend + optional Pallas blocks."""
+
+    backend: str
+    blocks: tuple[int, int, int] | None = None
+
+    def describe(self) -> str:
+        if self.blocks is None:
+            return self.backend
+        return f"{self.backend}[{'x'.join(map(str, self.blocks))}]"
+
+
+def default_backend_pool(platform: str | None = None) -> tuple[str, ...]:
+    """The fast-path backends worth measuring on ``platform``."""
+    platform = platform or jax.default_backend()
+    if platform == "tpu":
+        return ("pallas-tpu", "polyphase", "zero-insert")
+    return ("polyphase", "zero-insert")
+
+
+def _divisor_options(extent: int, preferred: Sequence[int]) -> list[int]:
+    """Divisors of ``extent`` drawn from ``preferred`` (order kept,
+    deduplicated, always non-empty because ``extent`` divides itself)."""
+    opts = []
+    for v in list(preferred) + [extent]:
+        if v > 0 and extent % v == 0 and v not in opts:
+            opts.append(v)
+    return opts
+
+
+def _pallas_geometry(key: PlanKey) -> tuple[int, int, int, int, int]:
+    """(qy, qx, taps, hp, wp) of the kernel invocation for ``key``."""
+    if key.kind == "tconv":
+        u = compile_uops(key.in_spatial, key.kernel, key.strides,
+                         key.paddings)
+        qy, qx = u.q_sizes
+        taps = u.tap_dy.shape[1]
+        pad = u.pad
+    else:
+        u = compile_conv_uops(key.in_spatial, key.kernel, key.strides,
+                              key.paddings)
+        qy, qx = u.out_sizes
+        taps = key.kernel[0] * key.kernel[1]
+        pad = u.pad
+    hp = key.in_spatial[0] + pad[0][0] + pad[0][1]
+    wp = key.in_spatial[1] + pad[1][0] + pad[1][1]
+    return qy, qx, taps, hp, wp
+
+
+def _vmem_bytes(key: PlanKey, qx: int, taps: int, hp: int, wp: int,
+                blocks: tuple[int, int, int]) -> int:
+    bqy, bci, bco = blocks
+    itemsize = jax.numpy.dtype(key.dtype).itemsize
+    x_blk = hp * wp * bci * itemsize
+    w_blk = taps * bci * bco * itemsize
+    out_blk = bqy * qx * bco * itemsize
+    acc = bqy * qx * bco * 4  # f32 accumulator scratch
+    return x_blk + w_blk + out_blk + acc
+
+
+def _pallas_candidates(key: PlanKey, backend: str) -> list[Candidate]:
+    qy, qx, taps, hp, wp = _pallas_geometry(key)
+    dflt = default_blocks(qy, key.cin, key.cout)
+    bqy_opts = _divisor_options(qy, [dflt[0], 16, 8, 4])
+    bci_opts = _divisor_options(key.cin, [dflt[1], 256, 128, 64])
+    bco_opts = _divisor_options(key.cout, [dflt[2], 256, 128, 64])
+    out = [Candidate(backend, dflt)]
+    for blocks in itertools.product(bqy_opts, bci_opts, bco_opts):
+        if blocks == dflt or \
+                _vmem_bytes(key, qx, taps, hp, wp, blocks) > \
+                VMEM_BUDGET_BYTES:
+            continue
+        out.append(Candidate(backend, blocks))
+        if len(out) >= MAX_BLOCK_CANDIDATES:
+            break
+    # the default stays even when over budget elsewhere would drop it: it
+    # is the comparison baseline the planner reports speedups against
+    return out
+
+
+def enumerate_candidates(key: PlanKey,
+                         backends: Sequence[str] | None = None
+                         ) -> list[Candidate]:
+    """Every configuration worth measuring for ``key``, heuristic
+    defaults first within each backend."""
+    pool = tuple(backends) if backends is not None else \
+        default_backend_pool(key.platform)
+    out: list[Candidate] = []
+    for backend in pool:
+        if not backend_supports(backend, key.nd):
+            continue
+        if backend.startswith("pallas"):
+            out.extend(_pallas_candidates(key, backend))
+        else:
+            out.append(Candidate(backend))
+    return out

@@ -1,0 +1,135 @@
+"""Measurement harness: timed runs of the unified op for one candidate.
+
+Timing methodology: the candidate is jit-compiled once, warmed up
+(compile + cache effects excluded), then run ``repeats`` times with a
+``block_until_ready`` fence around each run; the **median** is the
+reported cost (robust to scheduler noise — one slow outlier cannot
+promote or demote a candidate).
+
+Inputs are synthesized from the :class:`~repro.tune.planner.PlanKey`
+geometry (timing depends on shapes/dtypes, not values), deterministically
+seeded so re-measurement is reproducible.  The μop compilation stage is
+shared with production dispatch through the ``core.dataflow`` LRU cache,
+so tuning a geometry also pre-warms its schedule for later serving.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import DataflowPolicy
+from repro.core.dataflow import conv as df_conv
+from repro.core.dataflow import tconv as df_tconv
+from repro.tune.candidates import Candidate
+from repro.tune.planner import PlanKey
+
+__all__ = ["synthesize_inputs", "measure_candidate",
+           "measure_candidates_interleaved", "time_fn",
+           "time_interleaved"]
+
+
+def synthesize_inputs(key: PlanKey) -> tuple[jax.Array, jax.Array]:
+    """Deterministic random (x, w) with the key's shapes and dtype."""
+    rng = np.random.default_rng(zlib.crc32(key.describe().encode()))
+    dtype = jnp.dtype(key.dtype)
+    x = jnp.asarray(rng.normal(
+        size=(key.batch, *key.in_spatial, key.cin)), dtype)
+    w = jnp.asarray(rng.normal(
+        size=(*key.kernel, key.cin, key.cout)), dtype)
+    return x, w
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 5) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` over ``repeats`` timed
+    runs after ``warmup`` untimed ones."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def time_interleaved(thunks, *, warmup: int = 1,
+                     repeats: int = 5) -> list[float]:
+    """Median seconds per thunk, with the timed runs interleaved
+    round-robin (A,B,C,A,B,C,…) and the start position rotated per round.
+
+    Interleaving makes competing configurations share every noise
+    window, so their *ranking* is meaningful on a contended host where
+    back-to-back timing is not; the rotation stops whoever runs first in
+    a round from always paying the cold-cache/page-fault cost."""
+    for th in thunks:
+        for _ in range(warmup):
+            jax.block_until_ready(th())
+    times: list[list[float]] = [[] for _ in thunks]
+    for r in range(max(1, repeats)):
+        for i in range(len(thunks)):
+            j = (r + i) % len(thunks)
+            t0 = time.perf_counter()
+            jax.block_until_ready(thunks[j]())
+            times[j].append(time.perf_counter() - t0)
+    return [statistics.median(t) for t in times]
+
+
+def _candidate_fn(key: PlanKey, cand: Candidate):
+    """Jit-compiled forward op for one candidate.
+
+    Forward-only (``differentiable=False``): tuning targets the serving /
+    inference hot path; training reuses the tuned forward and the
+    heuristic backward (see ``core.dataflow``)."""
+    op = df_tconv if key.kind == "tconv" else df_conv
+    policy = DataflowPolicy(backend=cand.backend, differentiable=False)
+
+    @jax.jit
+    def run(x, w):
+        return op(x, w, key.strides, key.paddings, policy=policy,
+                  blocks=cand.blocks)
+
+    return run
+
+
+def measure_candidate(key: PlanKey, cand: Candidate, *,
+                      warmup: int = 1, repeats: int = 5) -> float:
+    """Median seconds per call of ``cand`` on ``key``'s workload.
+    Raises on candidates that fail to compile or run — the planner
+    treats that as an infinite cost, not an error."""
+    x, w = synthesize_inputs(key)
+    return time_fn(_candidate_fn(key, cand), x, w, warmup=warmup,
+                   repeats=repeats)
+
+
+def measure_candidates_interleaved(key: PlanKey,
+                                   cands: list[Candidate], *,
+                                   warmup: int = 1, repeats: int = 5
+                                   ) -> dict[Candidate, float]:
+    """Median seconds per call for each candidate via
+    :func:`time_interleaved` — back-to-back per-candidate timing lets one
+    slow scheduler window hand the plan to the wrong backend.
+
+    Candidates that fail to compile/warm up get ``inf`` (and are skipped
+    in the timed rounds)."""
+    x, w = synthesize_inputs(key)
+    good: list[Candidate] = []
+    thunks = []
+    for cand in cands:
+        try:
+            fn = _candidate_fn(key, cand)
+            for _ in range(max(1, warmup)):   # warm here: failure must
+                jax.block_until_ready(fn(x, w))  # only drop this one
+        except Exception:
+            continue
+        good.append(cand)
+        thunks.append(lambda fn=fn: fn(x, w))
+    out = {c: float("inf") for c in cands}
+    out.update(zip(good, time_interleaved(thunks, warmup=0,
+                                          repeats=repeats)))
+    return out

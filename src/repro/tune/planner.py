@@ -1,0 +1,331 @@
+"""Autotuning planner: persistent, measured per-layer execution plans.
+
+The :class:`Planner` owns the mapping ``PlanKey → Plan``:
+
+* **PlanKey** — the full layer geometry (op kind, batch, spatial sizes,
+  kernel, strides, paddings, channels) plus dtype and JAX platform.  Two
+  dispatches with the same key are the same workload, so one measured
+  plan serves both.
+* **Plan** — the winning backend name, its tuned Pallas block shapes
+  (``None`` for pure-JAX backends), the measured median wall-clock, and
+  a provenance tag (``"measured"`` vs ``"heuristic"``).
+* **Persistence** — plans live in memory and, when the planner has a
+  ``path``, in a JSON plan file written atomically after every newly
+  measured plan.  A corrupt or stale file (unparseable, wrong format
+  version, entries naming unknown backends) degrades to an empty cache
+  plus the heuristic — tuning is an optimization, never a failure mode.
+* **Counters** — ``lookups`` / ``hits`` / ``measurements`` make the
+  contract testable: a second process starting from a warm plan file
+  must answer every ``plan()`` call with **zero** measurements.
+
+``Planner.lookup`` is what ``DataflowPolicy(backend="auto")`` calls at
+dispatch time; it never measures (dispatch can be inside a ``jit``
+trace).  Measurement happens in ``Planner.plan`` / ``Planner.tune`` —
+driven by ``python -m repro.tune``, ``GanServer`` construction warmup,
+or user code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import math
+import os
+import threading
+from typing import Iterable, Sequence
+
+import jax
+
+from repro.core.dataflow import (DataflowPolicy, available_backends,
+                                 backend_supports)
+
+__all__ = ["PlanKey", "Plan", "Planner", "plan_key_for_op",
+           "PLAN_FORMAT_VERSION"]
+
+log = logging.getLogger(__name__)
+
+PLAN_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """One tunable workload: (layer geometry, dtype, platform)."""
+
+    kind: str                       # "tconv" | "conv"
+    batch: int
+    in_spatial: tuple[int, ...]
+    kernel: tuple[int, ...]
+    strides: tuple[int, ...]
+    paddings: tuple[int, ...]
+    cin: int
+    cout: int
+    dtype: str = "float32"
+    platform: str = "cpu"
+
+    @property
+    def nd(self) -> int:
+        return len(self.in_spatial)
+
+    def describe(self) -> str:
+        sp = "x".join(map(str, self.in_spatial))
+        k = "x".join(map(str, self.kernel))
+        s = "x".join(map(str, self.strides))
+        return (f"{self.kind} b{self.batch} {sp} k{k} s{s} "
+                f"{self.cin}->{self.cout} {self.dtype}@{self.platform}")
+
+    def to_json(self) -> dict:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PlanKey":
+        names = {f.name for f in dataclasses.fields(cls)}
+        if set(d) != names:
+            raise ValueError(f"bad plan key fields: {sorted(d)}")
+        d = dict(d)
+        for f in ("in_spatial", "kernel", "strides", "paddings"):
+            d[f] = tuple(int(v) for v in d[f])
+        for f in ("batch", "cin", "cout"):
+            d[f] = int(d[f])
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The chosen execution path for one :class:`PlanKey`."""
+
+    backend: str
+    blocks: tuple[int, int, int] | None = None  # Pallas tile shapes
+    measured_us: float | None = None            # winning median wall-clock
+    source: str = "measured"                    # "measured" | "heuristic"
+
+    def to_json(self) -> dict:
+        return {"backend": self.backend,
+                "blocks": list(self.blocks) if self.blocks else None,
+                "measured_us": self.measured_us,
+                "source": self.source}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Plan":
+        backend = d["backend"]
+        if not isinstance(backend, str):
+            raise ValueError(f"bad plan backend: {backend!r}")
+        blocks = d.get("blocks")
+        if blocks is not None:
+            blocks = tuple(int(v) for v in blocks)
+            if len(blocks) != 3:
+                raise ValueError(f"bad plan blocks: {blocks!r}")
+        us = d.get("measured_us")
+        return cls(backend=backend, blocks=blocks,
+                   measured_us=None if us is None else float(us),
+                   source=str(d.get("source", "measured")))
+
+
+def plan_key_for_op(kind: str, x, w, strides: Sequence[int],
+                    paddings: Sequence[int]) -> PlanKey:
+    """Build the plan key for one unified-op dispatch (works on tracers:
+    only shapes/dtypes are read)."""
+    nd = x.ndim - 2
+    return PlanKey(
+        kind=kind,
+        batch=int(x.shape[0]),
+        in_spatial=tuple(int(d) for d in x.shape[1:1 + nd]),
+        kernel=tuple(int(d) for d in w.shape[:nd]),
+        strides=tuple(int(s) for s in strides),
+        paddings=tuple(int(p) for p in paddings),
+        cin=int(w.shape[-2]),
+        cout=int(w.shape[-1]),
+        dtype=str(jax.numpy.dtype(x.dtype)),
+        platform=jax.default_backend(),
+    )
+
+
+class Planner:
+    """In-memory + JSON-persisted plan cache with measured tuning.
+
+    ``path=None`` keeps plans in memory only.  ``backends`` restricts the
+    candidate pool (default: the platform's fast backends — see
+    ``repro.tune.candidates``); ``warmup``/``repeats`` configure the
+    measurement harness.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None, *,
+                 backends: Sequence[str] | None = None,
+                 warmup: int = 1, repeats: int = 5,
+                 margin: float = 0.1):
+        self.path = os.fspath(path) if path is not None else None
+        self.backends = tuple(backends) if backends is not None else None
+        self.warmup = int(warmup)
+        self.repeats = int(repeats)
+        # a candidate must beat the heuristic by this fraction to win the
+        # plan: measured deltas inside the margin are noise, and flipping
+        # backends on noise makes "tuned" randomly slower than "default"
+        self.margin = float(margin)
+        self.measurements = 0       # candidate configs actually timed
+        self.lookups = 0
+        self.hits = 0
+        self.load_error: str | None = None
+        self.stale_dropped = 0
+        self._plans: dict[PlanKey, Plan] = {}
+        self._lock = threading.RLock()
+        if self.path is not None:
+            self._load()
+
+    # -- persistence --------------------------------------------------------
+    def _load(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or \
+                    doc.get("version") != PLAN_FORMAT_VERSION:
+                raise ValueError(
+                    f"unsupported plan file version "
+                    f"{doc.get('version') if isinstance(doc, dict) else doc!r}"
+                    f" (want {PLAN_FORMAT_VERSION})")
+            entries = doc.get("plans")
+            if not isinstance(entries, list):
+                raise ValueError("plan file has no 'plans' list")
+        except Exception as e:  # corrupt file → heuristics, not a crash
+            self.load_error = f"{type(e).__name__}: {e}"
+            log.warning("ignoring corrupt plan file %s (%s); falling back "
+                        "to heuristics", self.path, self.load_error)
+            return
+        for entry in entries:
+            try:
+                key = PlanKey.from_json(entry["key"])
+                plan = Plan.from_json(entry["plan"])
+                if plan.backend not in available_backends():
+                    raise ValueError(f"unknown backend {plan.backend!r}")
+                if not backend_supports(plan.backend, key.nd):
+                    raise ValueError(f"backend {plan.backend!r} does not "
+                                     f"support {key.nd}-D")
+            except Exception as e:  # stale entry → drop just this one
+                self.stale_dropped += 1
+                log.warning("dropping stale plan entry (%s): %r", e, entry)
+                continue
+            self._plans[key] = plan
+
+    def save(self) -> None:
+        """Atomically write the plan file (no-op without a path)."""
+        if self.path is None:
+            return
+        with self._lock:
+            doc = {"version": PLAN_FORMAT_VERSION,
+                   "plans": [{"key": k.to_json(), "plan": p.to_json()}
+                             for k, p in self._plans.items()]}
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                    exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+
+    # -- queries ------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def lookup(self, key: PlanKey) -> Plan | None:
+        """Dispatch-time consult: cached plan or None.  Never measures."""
+        with self._lock:
+            self.lookups += 1
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+            return plan
+
+    def put(self, key: PlanKey, plan: Plan) -> None:
+        """Install a plan directly (hand-written or externally measured)
+        and persist it."""
+        with self._lock:
+            self._plans[key] = plan
+        self.save()
+
+    def heuristic_plan(self, key: PlanKey) -> Plan:
+        """What the static heuristic would run (not cached — a later
+        ``plan()`` call should still be able to measure)."""
+        return Plan(backend=DataflowPolicy().resolve(key.nd), blocks=None,
+                    measured_us=None, source="heuristic")
+
+    def plan(self, key: PlanKey, *, measure: bool = True) -> Plan:
+        """The plan for ``key``: cached if known, freshly tuned when
+        ``measure`` (the default), else the heuristic."""
+        with self._lock:
+            cached = self._plans.get(key)
+            if cached is not None:
+                return cached
+        if not measure:
+            return self.heuristic_plan(key)
+        return self.tune(key)
+
+    # -- tuning -------------------------------------------------------------
+    def measure_candidates(self, key: PlanKey,
+                           backends: Sequence[str] | None = None
+                           ) -> dict:
+        """Measure every valid candidate for ``key``; returns
+        ``{Candidate: median_seconds}`` (failed candidates → inf).
+
+        Runs are interleaved across candidates so they share noise
+        windows — the ranking is what matters, not absolute numbers."""
+        from repro.tune.candidates import enumerate_candidates
+        from repro.tune.measure import measure_candidates_interleaved
+        cands = enumerate_candidates(
+            key, backends=backends if backends is not None
+            else self.backends)
+        timings = measure_candidates_interleaved(
+            key, cands, warmup=self.warmup, repeats=self.repeats)
+        with self._lock:
+            self.measurements += sum(
+                1 for t in timings.values() if math.isfinite(t))
+        for cand, t in timings.items():
+            if not math.isfinite(t):
+                log.warning("candidate %r failed on %s", cand,
+                            key.describe())
+        return timings
+
+    def tune(self, key: PlanKey,
+             backends: Sequence[str] | None = None) -> Plan:
+        """Measure the candidate set and cache + persist the winner.
+
+        The heuristic configuration only loses when a candidate beats it
+        by more than ``margin`` — within-noise deltas keep the default."""
+        timings = self.measure_candidates(key, backends=backends)
+        best = min(timings, key=timings.get, default=None)
+        if best is None or not math.isfinite(timings[best]):
+            plan = self.heuristic_plan(key)   # nothing measurable
+        else:
+            heur_backend = self.heuristic_plan(key).backend
+            # first candidate of the heuristic backend == default blocks
+            heur_cand = next((c for c in timings
+                              if c.backend == heur_backend), None)
+            if heur_cand is not None and \
+                    math.isfinite(timings[heur_cand]) and \
+                    timings[best] >= (1 - self.margin) * \
+                    timings[heur_cand]:
+                best = heur_cand
+            plan = Plan(backend=best.backend, blocks=best.blocks,
+                        measured_us=timings[best] * 1e6, source="measured")
+        with self._lock:
+            self._plans[key] = plan
+        self.save()
+        return plan
+
+    def warm(self, keys: Iterable[PlanKey], *,
+             measure: bool = True) -> dict[PlanKey, Plan]:
+        """Resolve plans for many keys up front (e.g. every layer of a
+        model before the first jit trace)."""
+        return {k: self.plan(k, measure=measure) for k in keys}
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {"plans": len(self._plans), "lookups": self.lookups,
+                    "hits": self.hits, "measurements": self.measurements,
+                    "stale_dropped": self.stale_dropped}
+
+    def __repr__(self) -> str:
+        src = f"path={self.path!r}" if self.path else "in-memory"
+        return (f"Planner({src}, plans={len(self._plans)}, "
+                f"measurements={self.measurements})")

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.dataflow import (DataflowPolicy, compile_uops, conv, tconv,
+from repro.core.dataflow import (DataflowPolicy, SecondOrderNotImplemented,
+                                 compile_uops, conv, tconv,
                                  uop_cache_clear, uop_cache_info)
 from repro.core.tconv import tconv_zero_insert
 from repro.kernels.ref import conv_ref
@@ -102,6 +103,43 @@ def test_tconv_grad_parity_3d():
     np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
                                atol=1e-4, rtol=1e-4)
     np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("op", [tconv, conv])
+def test_second_order_autodiff_raises_clearly(op):
+    """The kernel backends' custom VJP defines one backward pass;
+    grad-of-grad used to be silently wrong — it must raise with
+    guidance instead (ROADMAP open item)."""
+    policy = DataflowPolicy(backend="pallas-interpret")
+    x = jnp.ones((1, 4, 4, 2))
+    w = jnp.ones((3, 3, 2, 2))
+
+    def loss(x):
+        return jnp.sum(op(x, w, (2, 2), (1, 1), policy=policy) ** 2)
+
+    jax.grad(loss)(x)  # first order stays supported
+    with pytest.raises(SecondOrderNotImplemented,
+                       match="pure-JAX backend"):
+        jax.grad(lambda x: jnp.sum(jax.grad(loss)(x)))(x)
+
+
+def test_second_order_supported_on_pure_jax_backends():
+    """Higher-order autodiff keeps working where XLA natively provides
+    it, and matches across the two zero-free formulations."""
+    x = jnp.ones((1, 3, 3, 2)) * 0.5
+    w = jnp.ones((2, 2, 2, 2)) * 0.25
+
+    def loss(policy):
+        def f(x):
+            return jnp.sum(tconv(x, w, (2, 2), (0, 0), policy=policy) ** 3)
+        return f
+
+    g2 = {b: jax.grad(lambda x: jnp.sum(jax.grad(loss(
+        DataflowPolicy(backend=b)))(x)))(x)
+        for b in ("polyphase", "zero-insert")}
+    np.testing.assert_allclose(np.asarray(g2["polyphase"]),
+                               np.asarray(g2["zero-insert"]),
                                atol=1e-4, rtol=1e-4)
 
 

@@ -53,6 +53,56 @@ def test_conv_kernel_vs_oracle(xs, ws, s, p):
                                atol=1e-3, rtol=1e-3)
 
 
+# (blocks, case) — the autotuner's tunable tile shapes: qy-row tiling
+# and sub-128 channel tiles must be bit-compatible with the defaults.
+BLOCK_CASES = [
+    ((1, 4, 4, 8), (4, 4, 8, 16), (2, 2), (1, 1), (2, 4, 8)),
+    ((1, 4, 4, 8), (4, 4, 8, 16), (2, 2), (1, 1), (1, 8, 16)),
+    ((2, 6, 6, 4), (3, 3, 4, 4), (1, 1), (1, 1), (3, 2, 2)),
+    ((1, 5, 3, 4), (3, 5, 4, 4), (3, 2), (1, 2), (1, 4, 2)),
+]
+
+
+@pytest.mark.parametrize("xs,ws,s,p,blocks", BLOCK_CASES)
+def test_tconv_kernel_block_shapes(xs, ws, s, p, blocks):
+    rng = np.random.default_rng(hash((xs, ws, s, p)) % 2**31)
+    x = jnp.asarray(rng.normal(size=xs), jnp.float32)
+    w = jnp.asarray(rng.normal(size=ws), jnp.float32)
+    ref = tconv_ref(x, w, s, p)
+    got = ganax_conv_transpose(x, w, s, p, interpret=True, blocks=blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("xs,ws,s,p,blocks", [
+    ((1, 8, 8, 8), (3, 3, 8, 16), (2, 2), (1, 1), (1, 4, 8)),
+    ((1, 16, 16, 4), (4, 4, 4, 8), (2, 2), (1, 1), (4, 2, 4)),
+])
+def test_conv_kernel_block_shapes(xs, ws, s, p, blocks):
+    rng = np.random.default_rng(hash((xs, ws, s, p)) % 2**31)
+    x = jnp.asarray(rng.normal(size=xs), jnp.float32)
+    w = jnp.asarray(rng.normal(size=ws), jnp.float32)
+    ref = conv_ref(x, w, s, p)
+    got = ganax_conv(x, w, s, p, interpret=True, blocks=blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("blocks,err", [
+    ((3, 8, 16), "block_qy"),
+    ((4, 3, 16), "block_cin"),
+    ((4, 8, 5), "block_cout"),
+    ((0, 8, 16), "block_qy"),
+    ("bogus", "triple"),
+])
+def test_invalid_blocks_raise(blocks, err):
+    x = jnp.zeros((1, 4, 4, 8), jnp.float32)
+    w = jnp.zeros((4, 4, 8, 16), jnp.float32)
+    with pytest.raises(ValueError, match=err):
+        ganax_conv_transpose(x, w, (2, 2), (1, 1), interpret=True,
+                             blocks=blocks)
+
+
 @pytest.mark.parametrize("dtype,tol", [
     (jnp.float32, 1e-3),
     (jnp.bfloat16, 1.5e-1),

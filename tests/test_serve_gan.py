@@ -20,6 +20,79 @@ def test_generate_shapes_and_batching():
     assert srv.batches_served == 2  # 3 images → two 2-batches, tail sliced
 
 
+def test_sample_accounting():
+    """Discarded tail samples are real generator compute; the counters
+    must account for every sample produced."""
+    srv = _server(batch_size=4)
+    srv.generate(3)              # one batch: 3 served, 1 discarded
+    assert (srv.samples_served, srv.samples_discarded) == (3, 1)
+    srv.generate(8)              # two full batches: no discards
+    assert (srv.samples_served, srv.samples_discarded) == (11, 1)
+    srv.generate(5)              # 4 + 1 of 4 → 3 discarded
+    assert (srv.samples_served, srv.samples_discarded) == (16, 4)
+    assert srv.batches_served == 5
+    r = repr(srv)
+    assert "served=16" in r and "discarded=4" in r
+
+
+def test_repr_exposes_resolved_policy():
+    srv = _server()
+    # CPU host, pinned-by-legacy-config policy → polyphase
+    assert "policy=polyphase" in repr(srv)
+
+
+def test_auto_policy_warms_plans_on_construction():
+    """A backend='auto' server resolves a plan for every generator layer
+    before its first jit trace, and a warm planner means the warmup does
+    zero measurements."""
+    from repro.tune import Planner, set_planner
+
+    planner = set_planner(Planner(repeats=1))
+    try:
+        cfg = GanConfig(name="dcgan", channel_scale=0.03125,
+                        backend="auto")
+        g, _ = init_gan(cfg, jax.random.PRNGKey(0))
+        srv = GanServer(cfg, g, batch_size=2)
+        g_layers, _ = cfg.layers
+        assert len(srv.plans) == len(g_layers)
+        assert srv.plans and planner.measurements > 0
+        assert repr(srv).startswith("GanServer(model='dcgan'")
+        assert "auto(" in repr(srv)
+        imgs = srv.generate(2)
+        assert imgs.shape == (2, 64, 64, 3)
+
+        # a second server on the warm planner measures nothing
+        meas = planner.measurements
+        srv2 = GanServer(cfg, g, batch_size=2)
+        assert planner.measurements == meas
+        assert len(srv2.plans) == len(g_layers)
+    finally:
+        set_planner(None)
+
+
+def test_auto_matches_pinned_numerics():
+    """Acceptance: the auto policy server serves bit-identical images to
+    the concrete backend its plans name."""
+    from repro.tune import Plan, Planner, set_planner
+    from repro.tune.zoo import layer_plan_keys
+
+    cfg = GanConfig(name="dcgan", channel_scale=0.03125, backend="auto")
+    g, _ = init_gan(cfg, jax.random.PRNGKey(0))
+    planner = set_planner(Planner())
+    try:
+        g_layers, _ = cfg.layers
+        for _, key in layer_plan_keys(g_layers, batch=2):
+            planner.put(key, Plan(backend="zero-insert"))
+        auto_imgs = GanServer(cfg, g, batch_size=2, seed=3).generate(2)
+    finally:
+        set_planner(None)
+    cfg_z = GanConfig(name="dcgan", channel_scale=0.03125,
+                      backend="zero-insert")
+    pinned_imgs = GanServer(cfg_z, g, batch_size=2, seed=3).generate(2)
+    np.testing.assert_allclose(auto_imgs, pinned_imgs, atol=1e-5,
+                               rtol=1e-5)
+
+
 def test_generate_deterministic_per_seed():
     a = _server(seed=7).generate(2)
     b = _server(seed=7).generate(2)

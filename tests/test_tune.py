@@ -1,0 +1,299 @@
+"""Autotuning planner (`repro.tune`): candidate enumeration, measured
+plans, JSON persistence (round-trip / corrupt / stale / warm-file
+zero-measurement contract), and `DataflowPolicy(backend="auto")`
+dispatch."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dataflow import DataflowPolicy, available_backends, tconv
+from repro.tune import (Candidate, Plan, PlanKey, Planner,
+                        enumerate_candidates, plan_key_for_op,
+                        set_planner, warm_gan_plans)
+
+KEY = PlanKey(kind="tconv", batch=1, in_spatial=(4, 4), kernel=(4, 4),
+              strides=(2, 2), paddings=(1, 1), cin=4, cout=6,
+              dtype="float32", platform="cpu")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_planner():
+    """Tests must not leak a process-wide planner into each other."""
+    set_planner(None)
+    yield
+    set_planner(None)
+
+
+def _xw(key=KEY):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(key.batch, *key.in_spatial, key.cin)),
+                    jnp.float32)
+    w = jnp.asarray(rng.normal(size=(*key.kernel, key.cin, key.cout)),
+                    jnp.float32)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration.
+# ---------------------------------------------------------------------------
+
+def test_candidates_cpu_pool_excludes_pallas():
+    """On CPU the measured pool is the fast pure-JAX paths; compiled
+    pallas-tpu can't run and interpret mode is never a sensible plan."""
+    cands = enumerate_candidates(KEY)
+    assert [c.backend for c in cands] == ["polyphase", "zero-insert"]
+    assert all(c.blocks is None for c in cands)
+
+
+def test_candidates_pallas_blocks_valid_divisors():
+    key = PlanKey(kind="tconv", batch=1, in_spatial=(8, 8), kernel=(4, 4),
+                  strides=(2, 2), paddings=(1, 1), cin=128, cout=64,
+                  dtype="float32", platform="cpu")
+    cands = enumerate_candidates(key, backends=["pallas-interpret"])
+    assert cands[0].blocks is not None       # default blocks come first
+    qy = 8  # ceil(16/2): phase-plane height of the 8→16 upsample
+    for c in cands:
+        bqy, bci, bco = c.blocks
+        assert qy % bqy == 0 and 128 % bci == 0 and 64 % bco == 0
+    assert len({c.blocks for c in cands}) == len(cands) > 1
+
+
+def test_candidates_respect_rank_support():
+    key3d = PlanKey(kind="tconv", batch=1, in_spatial=(3, 3, 3),
+                    kernel=(4, 4, 4), strides=(2, 2, 2),
+                    paddings=(1, 1, 1), cin=2, cout=3,
+                    dtype="float32", platform="cpu")
+    cands = enumerate_candidates(key3d,
+                                 backends=["pallas-interpret", "polyphase"])
+    assert [c.backend for c in cands] == ["polyphase"]
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache persistence.
+# ---------------------------------------------------------------------------
+
+def test_plan_file_round_trip(tmp_path):
+    path = tmp_path / "plans.json"
+    p1 = Planner(path, repeats=2)
+    plan = p1.plan(KEY)
+    assert plan.source == "measured" and p1.measurements > 0
+    assert path.exists()
+
+    p2 = Planner(path)
+    assert len(p2) == 1
+    assert p2.lookup(KEY) == plan
+    # warm file → plan() answers with zero measurements
+    assert p2.plan(KEY) == plan
+    assert p2.measurements == 0
+
+
+def test_corrupt_plan_file_falls_back(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json")
+    p = Planner(path)
+    assert p.load_error is not None
+    assert len(p) == 0
+    assert p.lookup(KEY) is None            # heuristic territory, no crash
+    # the planner still tunes and can overwrite the corrupt file
+    p.repeats = 1
+    p.plan(KEY)
+    assert json.loads(path.read_text())["version"] == 1
+
+
+def test_stale_entries_dropped(tmp_path):
+    path = tmp_path / "plans.json"
+    good = {"key": KEY.to_json(),
+            "plan": Plan(backend="zero-insert").to_json()}
+    stale = {"key": KEY.to_json(),
+             "plan": {"backend": "systolic-array-9000", "blocks": None}}
+    path.write_text(json.dumps({"version": 1, "plans": [stale, good]}))
+    p = Planner(path)
+    assert p.stale_dropped == 1
+    assert p.lookup(KEY).backend == "zero-insert"
+
+
+def test_wrong_version_is_stale(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 999, "plans": []}))
+    p = Planner(path)
+    assert p.load_error is not None and "version" in p.load_error
+
+
+def test_second_process_warm_file_zero_measurements(tmp_path):
+    """The acceptance contract end-to-end: a fresh *process* starting
+    from the persisted plan file performs zero measurements."""
+    path = tmp_path / "plans.json"
+    Planner(path, repeats=1).plan(KEY)
+    key_json = json.dumps(KEY.to_json())
+    code = f"""
+import json
+from repro.tune import Planner, PlanKey
+key = PlanKey.from_json(json.loads({key_json!r}))
+p = Planner({str(path)!r})
+plan = p.plan(key)
+assert plan.source == "measured", plan
+assert p.measurements == 0, p.measurements
+print("MEASUREMENTS", p.measurements)
+"""
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ,
+               PYTHONPATH=f"{root / 'src'}:{os.environ.get('PYTHONPATH', '')}",
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         cwd=str(root), env=env)
+    assert out.returncode == 0, out.stderr
+    assert "MEASUREMENTS 0" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Measured tuning behavior.
+# ---------------------------------------------------------------------------
+
+def test_tune_prefers_heuristic_within_margin(monkeypatch):
+    """A within-noise 'win' must not flip the plan off the heuristic."""
+    p = Planner(margin=0.1)
+    fake = {Candidate("polyphase"): 1.00e-3,
+            Candidate("zero-insert"): 0.95e-3}   # 5% faster: inside margin
+    monkeypatch.setattr(p, "measure_candidates", lambda key, backends=None:
+                        dict(fake))
+    assert p.tune(KEY).backend == "polyphase"
+    fake[Candidate("zero-insert")] = 0.5e-3      # 50% faster: clear win
+    assert p.tune(KEY).backend == "zero-insert"
+
+
+def test_tune_all_candidates_failing_degrades_to_heuristic(monkeypatch):
+    p = Planner()
+    monkeypatch.setattr(p, "measure_candidates",
+                        lambda key, backends=None: {})
+    plan = p.tune(KEY)
+    assert plan.source == "heuristic"
+    assert plan.backend == DataflowPolicy().resolve(2)
+
+
+# ---------------------------------------------------------------------------
+# backend="auto" dispatch.
+# ---------------------------------------------------------------------------
+
+AUTO_BACKENDS = [b for b in available_backends() if b != "pallas-tpu"]
+
+
+@pytest.mark.parametrize("backend", AUTO_BACKENDS)
+def test_auto_matches_every_concrete_backend(backend):
+    """Acceptance: auto dispatch executing a plan pinned to each concrete
+    backend reproduces that backend's numerics exactly."""
+    x, w = _xw()
+    planner = set_planner(Planner())
+    planner.put(KEY, Plan(backend=backend, blocks=None))
+    auto = tconv(x, w, KEY.strides, KEY.paddings,
+                 policy=DataflowPolicy(backend="auto"))
+    pinned = tconv(x, w, KEY.strides, KEY.paddings,
+                   policy=DataflowPolicy(backend=backend))
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(pinned),
+                               atol=1e-5, rtol=1e-5)
+    assert planner.hits >= 1 and planner.measurements == 0
+
+
+def test_auto_uses_tuned_pallas_blocks():
+    """An auto plan carrying Pallas block shapes reaches the kernel (and
+    stays differentiable through the custom VJP)."""
+    key = PlanKey(kind="tconv", batch=1, in_spatial=(4, 4), kernel=(4, 4),
+                  strides=(2, 2), paddings=(1, 1), cin=4, cout=6,
+                  dtype="float32", platform="cpu")
+    planner = set_planner(Planner())
+    planner.put(key, Plan(backend="pallas-interpret", blocks=(2, 2, 3)))
+    x, w = _xw(key)
+    policy = DataflowPolicy(backend="auto")
+
+    def loss(x, w):
+        return jnp.sum(tconv(x, w, key.strides, key.paddings,
+                             policy=policy) ** 2)
+
+    ref = tconv(x, w, key.strides, key.paddings,
+                policy=DataflowPolicy(backend="zero-insert"))
+    np.testing.assert_allclose(
+        np.asarray(tconv(x, w, key.strides, key.paddings, policy=policy)),
+        np.asarray(ref), atol=1e-4, rtol=1e-4)
+    gx = jax.grad(loss)(x, w)
+    assert gx.shape == x.shape
+
+
+def test_auto_plan_miss_falls_back_to_heuristic():
+    x, w = _xw()
+    planner = set_planner(Planner())
+    out = tconv(x, w, KEY.strides, KEY.paddings,
+                policy=DataflowPolicy(backend="auto"))
+    ref = tconv(x, w, KEY.strides, KEY.paddings)   # heuristic policy
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert planner.lookups == 1 and planner.hits == 0
+    assert planner.measurements == 0               # dispatch never measures
+
+
+def test_auto_stale_plan_backend_falls_back():
+    """A plan naming a backend that can't run this rank degrades to the
+    heuristic instead of raising (stale plan files must never break
+    dispatch)."""
+    key3d = PlanKey(kind="tconv", batch=1, in_spatial=(3, 3, 3),
+                    kernel=(2, 2, 2), strides=(2, 2, 2),
+                    paddings=(0, 0, 0), cin=2, cout=3,
+                    dtype="float32", platform="cpu")
+    planner = set_planner(Planner())
+    planner.put(key3d, Plan(backend="pallas-interpret"))  # 2-D only
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 3, 3, 3, 2)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 2, 2, 3)), jnp.float32)
+    out = tconv(x, w, key3d.strides, key3d.paddings,
+                policy=DataflowPolicy(backend="auto"))
+    assert out.shape == (1, 6, 6, 6, 3)
+
+
+def test_auto_stale_plan_blocks_fall_back():
+    """Block shapes that no longer divide the geometry (hand-edited or
+    version-skewed plan file) keep the planned backend but drop to its
+    default tiles — never a ValueError from inside a trace."""
+    planner = set_planner(Planner())
+    planner.put(KEY, Plan(backend="pallas-interpret", blocks=(3, 8, 16)))
+    x, w = _xw()
+    out = jax.jit(lambda x, w: tconv(
+        x, w, KEY.strides, KEY.paddings,
+        policy=DataflowPolicy(backend="auto")))(x, w)
+    ref = tconv(x, w, KEY.strides, KEY.paddings,
+                policy=DataflowPolicy(backend="pallas-interpret"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_auto_interpret_contradiction_raises():
+    with pytest.raises(ValueError, match="auto"):
+        DataflowPolicy(backend="auto", interpret=True).resolve(2)
+
+
+def test_plan_key_for_op_matches_layer_key():
+    """Dispatch-built keys (from array shapes) and topology-built keys
+    (from ConvLayer geometry) must agree, or plans warmed ahead of time
+    would never be found at dispatch."""
+    x, w = _xw()
+    key = plan_key_for_op("tconv", x, w, KEY.strides, KEY.paddings)
+    assert key == KEY  # conftest pins JAX_PLATFORMS=cpu
+
+
+def test_warm_gan_plans_covers_all_layers():
+    from repro.models.gan import GanConfig
+    cfg = GanConfig(name="dcgan", channel_scale=0.03125)
+    planner = Planner(repeats=1)
+    plans = warm_gan_plans(cfg, batch=2, planner=planner)
+    g_layers, d_layers = cfg.layers
+    assert len(plans) == len(g_layers) + len(d_layers)
+    assert all(p.source == "measured" for p in plans.values())
+    # warming again is free: every geometry already has a plan
+    before = planner.measurements
+    warm_gan_plans(cfg, batch=2, planner=planner)
+    assert planner.measurements == before
