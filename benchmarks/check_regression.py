@@ -1,0 +1,164 @@
+"""CI bench regression gate: fail on per-model slowdown vs the baseline.
+
+Compares fresh ``BENCH_dataflow.json`` / ``BENCH_tune.json`` artifacts
+against the checked-in ``BENCH_baseline.json`` snapshot and exits
+non-zero when any gated per-model metric regressed by more than the
+threshold (default 25%):
+
+* ``dataflow.<model>.polyphase_us`` — the GANAX dataflow wall-clock per
+  Table-I model (the zero-elimination trajectory, 2-D and volumetric);
+* ``dataflow.<model>.wallclock_speedup`` — zero-insert/polyphase ratio,
+  higher is better.  Machine-relative (both sides measured in the same
+  run), so it stays meaningful even when the runner class changes;
+* ``tune.<model>.generator_tuned_us`` — the tuned end-to-end generator.
+
+Faster-than-baseline results always pass (speedups are the point); a
+model present in the baseline but missing from the fresh artifacts is a
+coverage regression and fails; new models not in the baseline are
+reported but don't gate.
+
+Absolute wall-clock baselines are machine-class-sensitive: after a
+runner change (or when the checked-in baseline predates one), refresh
+it from a green run's artifacts with ``--update`` — the dimensionless
+``wallclock_speedup`` rows keep gating meaningfully in the meantime.
+
+Override: CI sets ``BENCH_GATE_OVERRIDE=1`` when the PR carries the
+``bench-regression-override`` label — regressions are then reported but
+the job stays green (for noisy-runner false positives or accepted
+trade-offs; refresh the baseline with ``--update`` in the same PR).
+
+Usage::
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_baseline.json \
+        --dataflow BENCH_dataflow.json --tune BENCH_tune.json
+    python benchmarks/check_regression.py --update   # refresh baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+# (section, per-model metric, direction) the gate tracks: "lower" =
+# wall-clock (bigger is a regression), "higher" = ratio (smaller is).
+GATED_METRICS = (
+    ("dataflow", "polyphase_us", "lower"),
+    ("dataflow", "wallclock_speedup", "higher"),
+    ("tune", "generator_tuned_us", "lower"),
+)
+DEFAULT_THRESHOLD = 0.25
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _models(doc: dict) -> dict:
+    return {k: v for k, v in doc.items()
+            if k != "_meta" and isinstance(v, dict)}
+
+
+def extract(dataflow: dict, tune: dict) -> dict:
+    """The gated (section → model → metric value) snapshot of two fresh
+    artifact files."""
+    fresh = {"dataflow": {}, "tune": {}}
+    sources = {"dataflow": _models(dataflow), "tune": _models(tune)}
+    for section, metric, _ in GATED_METRICS:
+        for model, row in sources[section].items():
+            value = row.get(metric)
+            if isinstance(value, (int, float)) and value > 0:
+                fresh[section].setdefault(model, {})[metric] = value
+    return fresh
+
+
+def compare(baseline: dict, fresh: dict, threshold: float
+            ) -> tuple[list[str], list[str]]:
+    """(failures, report_lines) of fresh vs baseline."""
+    failures: list[str] = []
+    lines = ["| metric | baseline | fresh | regression | gate |",
+             "|---|---|---|---|---|"]
+    for section, metric, direction in GATED_METRICS:
+        base_models = baseline.get(section, {})
+        fresh_models = fresh.get(section, {})
+        for model in sorted(set(base_models) | set(fresh_models)):
+            name = f"{section}/{model}/{metric}"
+            base = base_models.get(model, {}).get(metric)
+            new = fresh_models.get(model, {}).get(metric)
+            if base is None:
+                lines.append(f"| {name} | - | {new:,.2f} | new | - |")
+                continue
+            if new is None:
+                failures.append(f"{name}: present in baseline but "
+                                f"missing from the fresh artifacts")
+                lines.append(f"| {name} | {base:,.2f} | - | - | MISSING |")
+                continue
+            # positive = got worse, whatever the metric's direction
+            regress = (new / base if direction == "lower"
+                       else base / new) - 1.0
+            gate = "FAIL" if regress > threshold else "ok"
+            if regress > threshold:
+                failures.append(
+                    f"{name}: {base:,.2f} -> {new:,.2f} "
+                    f"({regress:+.1%} worse > +{threshold:.0%} threshold)")
+            lines.append(f"| {name} | {base:,.2f} | {new:,.2f} | "
+                         f"{regress:+.1%} | {gate} |")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=str(root / "BENCH_baseline.json"))
+    ap.add_argument("--dataflow", default=str(root / "BENCH_dataflow.json"))
+    ap.add_argument("--tune", default=str(root / "BENCH_tune.json"))
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="per-model slowdown fraction that fails the gate "
+                         f"(default: baseline file's, else "
+                         f"{DEFAULT_THRESHOLD})")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh artifacts "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+
+    fresh = extract(_load(args.dataflow), _load(args.tune))
+    if args.update:
+        doc = {"threshold": args.threshold or DEFAULT_THRESHOLD, **fresh}
+        pathlib.Path(args.baseline).write_text(
+            json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {args.baseline}")
+        return 0
+
+    baseline = _load(args.baseline)
+    threshold = args.threshold if args.threshold is not None else \
+        float(baseline.get("threshold", DEFAULT_THRESHOLD))
+    failures, lines = compare(baseline, fresh, threshold)
+
+    print(f"## Bench regression gate (threshold +{threshold:.0%})\n")
+    print("\n".join(lines))
+    override = os.environ.get("BENCH_GATE_OVERRIDE", "") not in ("", "0")
+    if failures:
+        print(f"\n{len(failures)} regression(s):")
+        for f in failures:
+            print(f"  - {f}")
+        if override:
+            print("\nBENCH_GATE_OVERRIDE set "
+                  "(bench-regression-override label): not failing the "
+                  "job; refresh BENCH_baseline.json with --update if "
+                  "this slowdown is accepted.")
+            return 0
+        print("\nSlower than baseline. If this is expected (accepted "
+              "trade-off or noisy runner), apply the "
+              "`bench-regression-override` label and/or refresh the "
+              "baseline: python benchmarks/check_regression.py --update")
+        return 1
+    print("\nNo regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,9 @@ Runnable directly with the same knobs the tuner and CI use::
 
 ``--backends`` accepts any registered dataflow backend plus ``auto``
 (planner-consulting dispatch — tuned when a plan file is warm, heuristic
-otherwise).
+otherwise).  The default model pool includes ``3dgan`` so the artifacts
+track the volumetric trajectory now that the Pallas kernel covers 3-D;
+its wall-clock rows feed the CI regression gate like every other model.
 """
 
 from __future__ import annotations
@@ -93,19 +95,29 @@ def bench_dataflows(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
 
 
 def bench_kernel_interpret():
-    """Sanity timing of the Pallas kernel in interpret mode (correctness
-    path; not a perf number)."""
+    """Sanity timing of the Pallas kernel in interpret mode — both the
+    planar and the volumetric (3-D) entry points (correctness path; not
+    a perf number)."""
     rng = np.random.default_rng(0)
+    policy = DataflowPolicy(backend="pallas-interpret")
     x = jnp.asarray(rng.normal(size=(1, 8, 8, 128)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(4, 4, 128, 128)), jnp.float32)
-    policy = DataflowPolicy(backend="pallas-interpret")
     t0 = time.perf_counter()
-    out = tconv(x, w, (2, 2), (1, 1), policy=policy)
-    jax.block_until_ready(out)
+    jax.block_until_ready(tconv(x, w, (2, 2), (1, 1), policy=policy))
     dt = time.perf_counter() - t0
     print(f"\n  pallas-interpret tconv 8x8x128→16x16x128: {dt*1e3:.1f}ms "
-          f"(correctness path)")
-    return [("micro/pallas_interpret_us", dt * 1e6, "interpret mode")]
+          "(correctness path)")
+    x3 = jnp.asarray(rng.normal(size=(1, 4, 4, 4, 32)), jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(4, 4, 4, 32, 32)), jnp.float32)
+    t0 = time.perf_counter()
+    jax.block_until_ready(tconv(x3, w3, (2, 2, 2), (1, 1, 1),
+                                policy=policy))
+    dt3 = time.perf_counter() - t0
+    print(f"  pallas-interpret tconv3d 4³x32→8³x32: {dt3*1e3:.1f}ms "
+          "(correctness path)")
+    return [("micro/pallas_interpret_us", dt * 1e6, "interpret mode"),
+            ("micro/pallas_interpret_3d_us", dt3 * 1e6,
+             "interpret mode, volumetric")]
 
 
 def run_all(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,

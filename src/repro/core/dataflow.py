@@ -85,13 +85,15 @@ class CompiledUops:
     """Frozen static schedule artifacts for one tconv geometry.
 
     ``schedule`` serves every backend; the remaining fields are the
-    kernel-ready "local μop buffer" contents for the 2-D Pallas path
-    (``None`` for other ranks): flattened tap tables, per-phase
+    kernel-ready "local μop buffer" contents for the 2-D and 3-D Pallas
+    paths (``None`` for other ranks): flattened tap tables, per-phase
     weight-gather indices, and the uniform input padding plan.
+    ``tap_dz`` is the depth offset table of the volumetric kernel and is
+    ``None`` for 2-D geometries.
     """
 
     schedule: PhaseSchedule
-    # -- Pallas prep (2-D only) ---------------------------------------------
+    # -- Pallas prep (2-D / 3-D) --------------------------------------------
     n_taps: np.ndarray | None       # (P,)
     tap_dy: np.ndarray | None       # (P, T)
     tap_dx: np.ndarray | None       # (P, T)
@@ -99,17 +101,20 @@ class CompiledUops:
     valid: np.ndarray | None        # (P, T) tap-validity mask
     pad: tuple[tuple[int, int], ...] | None   # per-spatial-dim input padding
     q_sizes: tuple[int, ...] | None           # phase-plane grid (ceil(out/s))
+    tap_dz: np.ndarray | None = None          # (P, T), 3-D only
 
 
 @dataclasses.dataclass(frozen=True)
 class ConvUops:
-    """Frozen single-phase (SIMD-mode) tables for a plain strided conv."""
+    """Frozen single-phase (SIMD-mode) tables for a plain strided conv.
+    ``tap_dz`` is ``None`` for 2-D geometries."""
 
     out_sizes: tuple[int, ...]
     n_taps: np.ndarray              # (1,)
-    tap_dy: np.ndarray              # (1, KH*KW)
-    tap_dx: np.ndarray              # (1, KH*KW)
+    tap_dy: np.ndarray              # (1, prod(kernel))
+    tap_dx: np.ndarray              # (1, prod(kernel))
     pad: tuple[tuple[int, int], ...]
+    tap_dz: np.ndarray | None = None    # (1, prod(kernel)), 3-D only
 
 
 @functools.lru_cache(maxsize=512)
@@ -118,66 +123,72 @@ def compile_uops(in_spatial: tuple[int, ...], kernel: tuple[int, ...],
                  ) -> CompiledUops:
     """Run the static μop compilation once per layer geometry."""
     sched = make_schedule(in_spatial, kernel, strides, paddings)
-    if sched.n_dims != 2:
+    nd = sched.n_dims
+    if nd not in (2, 3):
         return CompiledUops(schedule=sched, n_taps=None, tap_dy=None,
                             tap_dx=None, k_idx=None, valid=None, pad=None,
                             q_sizes=None)
     tables = sched.tap_tables()
-    tap_off = tables["tap_dx"]          # (P, T, 2)
-    tap_k = tables["tap_k"]             # (P, T, 2)
+    tap_off = tables["tap_dx"]          # (P, T, nd)
+    tap_k = tables["tap_k"]             # (P, T, nd)
     n_taps = tables["n_taps"]           # (P,)
     t_max = tap_off.shape[1]
 
-    kh, kw = kernel
-    k_idx = tap_k[..., 0] * kw + tap_k[..., 1]                # (P, T)
+    # Row-major flattened kernel tap index over all spatial dims.
+    k_idx = tap_k[..., 0]
+    for d in range(1, nd):
+        k_idx = k_idx * kernel[d] + tap_k[..., d]             # (P, T)
     valid = np.arange(t_max)[None, :] < n_taps[:, None]
     k_idx = np.where(valid, k_idx, 0)
 
-    # Uniform padding, extended so every (dy + q) window slice stays in
-    # bounds (the kernel walks phase planes with unit window stride).
+    # Uniform padding, extended so every (offset + q) window slice stays
+    # in bounds (the kernel walks phase planes with unit window stride).
     q_sizes = tuple(-(-o // s) for o, s in zip(sched.out_sizes, strides))
-    (py_lo, py_hi), (px_lo, px_hi) = sched.uniform_padding()
-    need_y = int(tap_off[..., 0].max()) + (q_sizes[0] - 1) + 1
-    need_x = int(tap_off[..., 1].max()) + (q_sizes[1] - 1) + 1
-    hp0 = in_spatial[0] + py_lo + py_hi
-    wp0 = in_spatial[1] + px_lo + px_hi
-    pad = ((py_lo, py_hi + max(0, need_y - hp0)),
-           (px_lo, px_hi + max(0, need_x - wp0)))
+    upad = sched.uniform_padding()
+    pad = []
+    for d in range(nd):
+        lo, hi = upad[d]
+        need = int(tap_off[..., d].max()) + (q_sizes[d] - 1) + 1
+        extent = in_spatial[d] + lo + hi
+        pad.append((lo, hi + max(0, need - extent)))
+    offs = {f"tap_d{ax}": _frozen(tap_off[..., d])
+            for d, ax in enumerate("zyx"[-nd:])}
     return CompiledUops(
         schedule=sched,
         n_taps=_frozen(n_taps),
-        tap_dy=_frozen(tap_off[..., 0]),
-        tap_dx=_frozen(tap_off[..., 1]),
         k_idx=_frozen(k_idx.astype(np.int32)),
         valid=_frozen(valid),
-        pad=pad,
+        pad=tuple(pad),
         q_sizes=q_sizes,
+        **offs,
     )
 
 
 @functools.lru_cache(maxsize=512)
-def compile_conv_uops(in_spatial: tuple[int, int], kernel: tuple[int, int],
-                      strides: tuple[int, int], paddings: tuple[int, int]
-                      ) -> ConvUops:
-    """Single-phase tap tables for a 2-D plain conv (the paper's SIMD
+def compile_conv_uops(in_spatial: tuple[int, ...],
+                      kernel: tuple[int, ...], strides: tuple[int, ...],
+                      paddings: tuple[int, ...]) -> ConvUops:
+    """Single-phase tap tables for a 2-D/3-D plain conv (the paper's SIMD
     mode: one microprogram whose taps are the full kernel)."""
-    kh, kw = kernel
-    sy, sx = strides
-    py, px = paddings
-    h, w = in_spatial
-    qy = (h + 2 * py - kh) // sy + 1
-    qx = (w + 2 * px - kw) // sx + 1
-    t_max = kh * kw
-    tap_dy = np.repeat(np.arange(kh), kw)[None, :].astype(np.int32)
-    tap_dx = np.tile(np.arange(kw), kh)[None, :].astype(np.int32)
-    need_y = (kh - 1) + (qy - 1) * sy + 1
-    need_x = (kw - 1) + (qx - 1) * sx + 1
-    pad = ((py, max(0, need_y - (h + py))),
-           (px, max(0, need_x - (w + px))))
-    return ConvUops(out_sizes=(qy, qx),
+    nd = len(in_spatial)
+    if not pallas_kernel_supported(nd):
+        raise ValueError(f"conv μop tables exist only for the kernel's "
+                         f"spatial ranks (2-D/3-D), got {nd}-D")
+    out_sizes = tuple((i + 2 * p - k) // s + 1
+                      for i, k, s, p in zip(in_spatial, kernel, strides,
+                                            paddings))
+    t_max = int(np.prod(kernel))
+    taps = np.stack([np.asarray(u, np.int32)
+                     for u in np.ndindex(*kernel)])       # (T, nd)
+    pad = tuple(
+        (p, max(0, (k - 1) + (q - 1) * s + 1 - (i + p)))
+        for i, k, s, p, q in zip(in_spatial, kernel, strides, paddings,
+                                 out_sizes))
+    offs = {f"tap_d{ax}": _frozen(taps[None, :, d])
+            for d, ax in enumerate("zyx"[-nd:])}
+    return ConvUops(out_sizes=out_sizes,
                     n_taps=_frozen(np.asarray([t_max], np.int32)),
-                    tap_dy=_frozen(tap_dy), tap_dx=_frozen(tap_dx),
-                    pad=pad)
+                    pad=pad, **offs)
 
 
 def uop_cache_info() -> dict[str, int]:
@@ -196,6 +207,10 @@ def uop_cache_clear() -> None:
 # Backend registry.
 # ---------------------------------------------------------------------------
 
+def _any_rank(nd: int) -> bool:
+    return True
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
     """One executable dataflow: a tconv and a conv implementation.
@@ -208,7 +223,7 @@ class Backend:
     name: str
     tconv: Callable[..., jax.Array]
     conv: Callable[..., jax.Array]
-    supports: Callable[[int], bool] = lambda nd: True
+    supports: Callable[[int], bool] = _any_rank
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -231,8 +246,9 @@ def backend_supports(name: str, nd: int) -> bool:
 
 def pallas_kernel_supported(nd: int) -> bool:
     """Spatial ranks the Pallas kernel implements (single source of
-    truth for both dispatch and the ops-level guards)."""
-    return nd == 2
+    truth for both dispatch and the ops-level guards): planar (2-D) and
+    volumetric (3-D) layers."""
+    return nd in (2, 3)
 
 
 def _conv_dense(x, w, strides, paddings):
@@ -593,14 +609,17 @@ def _blocks_valid(is_conv: bool, x, w, strides, paddings, blocks) -> bool:
     """True when ``blocks`` divides this geometry's kernel extents —
     a stale plan entry must degrade, never raise from inside a trace."""
     from repro.kernels.ops import resolve_blocks
+    nd = x.ndim - 2
     if is_conv:
-        u = compile_conv_uops(x.shape[1:3], w.shape[:2], strides, paddings)
-        qy = u.out_sizes[0]
+        u = compile_conv_uops(x.shape[1:1 + nd], w.shape[:nd], strides,
+                              paddings)
+        q_lead = u.out_sizes[:-1]
     else:
-        u = compile_uops(x.shape[1:3], w.shape[:2], strides, paddings)
-        qy = u.q_sizes[0]
+        u = compile_uops(x.shape[1:1 + nd], w.shape[:nd], strides,
+                         paddings)
+        q_lead = u.q_sizes[:-1]
     try:
-        resolve_blocks(blocks, qy, int(w.shape[-2]), int(w.shape[-1]))
+        resolve_blocks(blocks, q_lead, int(w.shape[-2]), int(w.shape[-1]))
     except ValueError:
         return False
     return True
@@ -613,10 +632,11 @@ def tconv(x: jax.Array, w: jax.Array, strides: Sequence[int],
     """Transposed convolution through the unified GANAX dispatch.
 
     x: (N, *spatial, Cin) channels-last; w: (K..., Cin, Cout).
-    ``blocks`` pins the Pallas kernel tile shapes
-    (block_qy, block_cin, block_cout) — the per-call escape hatch the
-    autotuner measures through; with ``backend="auto"`` the planner's
-    tuned blocks are used instead.
+    ``blocks`` pins the Pallas kernel tile shapes — the
+    (block_qy, block_cin, block_cout) triple for 2-D layers, the
+    (block_qz, block_qy, block_cin, block_cout) quadruple for volumetric
+    ones — the per-call escape hatch the autotuner measures through;
+    with ``backend="auto"`` the planner's tuned blocks are used instead.
     """
     policy = policy or DataflowPolicy()
     strides, paddings = tuple(strides), tuple(paddings)

@@ -32,7 +32,6 @@ trace time; nothing here is traced):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import numpy as np

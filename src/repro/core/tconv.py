@@ -21,7 +21,6 @@ match ``jax.lax.conv_transpose``.
 from __future__ import annotations
 
 import string
-from functools import partial
 from typing import Sequence
 
 import jax

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator
+from typing import Callable
 
 import jax
 import numpy as np

@@ -35,11 +35,20 @@ small: ≤ ~70² × 128-channel tile ≈ 1.2 MiB in f32), while the *output*
 rows are tiled by ``block_qy`` so the accumulator footprint is a free
 parameter.  The MXU contraction is (bq·Qx, Cin)×(Cin, Cout) per tap.
 
-The block shapes (``block_qy``, ``block_cin``, ``block_cout``) are
-tunable parameters, not constants: the autotuning planner
-(``repro.tune``) enumerates the valid divisors for a layer geometry and
-measures them; the defaults (full Qy, 128-aligned channel tiles) are the
-heuristic used when no plan exists.
+The zero-pattern repetition the schedule exploits is rank-agnostic, so
+the same design extends to volumetric (3-D) layers — the 3D-GAN
+workload: :func:`ganax_conv3d_pallas` adds a depth axis to every table
+(``tap_dz``), tiles output *planes* with ``block_qz`` alongside the
+``block_qy`` row tiling, and walks a 6-D grid
+(B, P, Qz/bz, Qy/bq, Cout/bc, Cin/bk).  The contraction becomes
+(bz·bq·Qx, Cin)×(Cin, Cout) per tap; everything else — scalar-prefetched
+μop tables, data-driven tap loops, zero elimination — is unchanged.
+
+The block shapes (``block_qz`` for 3-D, ``block_qy``, ``block_cin``,
+``block_cout``) are tunable parameters, not constants: the autotuning
+planner (``repro.tune``) enumerates the valid divisors for a layer
+geometry and measures them; the defaults (full Qz/Qy, 128-aligned
+channel tiles) are the heuristic used when no plan exists.
 """
 
 from __future__ import annotations
@@ -53,7 +62,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
-__all__ = ["ganax_conv_kernel", "ganax_conv_pallas"]
+__all__ = ["ganax_conv_kernel", "ganax_conv_pallas",
+           "ganax_conv3d_kernel", "ganax_conv3d_pallas"]
 
 
 def ganax_conv_kernel(
@@ -149,3 +159,112 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
         ),
     )
     return fn(n_taps, tap_dy, tap_dx, x_pad, w_taps)
+
+
+def ganax_conv3d_kernel(
+    # scalar-prefetch refs (SMEM)
+    n_taps_ref, tap_dz_ref, tap_dy_ref, tap_dx_ref,
+    # tensor refs (VMEM blocks)
+    x_ref, w_ref, out_ref, acc_ref,
+    *, bqz: int, bqy: int, qx: int, sz: int, sy: int, sx: int,
+    n_cin_tiles: int,
+):
+    """One grid step: (batch b, phase p, qz tile, qy tile, cout, cin)."""
+    ph = pl.program_id(1)
+    zb = pl.program_id(2)
+    qb = pl.program_id(3)
+    ci = pl.program_id(5)
+    pl0 = zb * bqz * sz           # first padded-input plane of this qz tile
+    row0 = qb * bqy * sy          # first padded-input row of this qy tile
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n = n_taps_ref[ph]
+
+    def tap_body(t, _):
+        dz = tap_dz_ref[ph, t]
+        dy = tap_dy_ref[ph, t]
+        dx = tap_dx_ref[ph, t]
+        # Access engine: strided volume starting at (dz + pl0, dy + row0,
+        # dx).  For plain strided convs the volume is subsampled post-load.
+        xt = x_ref[0, pl.ds(dz + pl0, (bqz - 1) * sz + 1),
+                   pl.ds(dy + row0, (bqy - 1) * sy + 1),
+                   pl.ds(dx, (qx - 1) * sx + 1), :]
+        xt = xt[::sz, ::sy, ::sx, :] if (sz > 1 or sy > 1 or sx > 1) else xt
+        wt = w_ref[0, t]                       # (cin_t, cout_t)
+        # Execute engine: MXU contraction over the channel tile.
+        acc_ref[...] += jax.lax.dot_general(
+            xt.reshape(bqz * bqy * qx, xt.shape[-1]), wt,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return ()
+
+    jax.lax.fori_loop(0, n, tap_body, ())
+
+    @pl.when(ci == n_cin_tiles - 1)
+    def _flush():
+        out_ref[0, 0] = acc_ref[...].reshape(bqz, bqy, qx, -1) \
+            .astype(out_ref.dtype)
+
+
+def ganax_conv3d_pallas(x_pad: jax.Array, w_taps: jax.Array,
+                        n_taps: jax.Array, tap_dz: jax.Array,
+                        tap_dy: jax.Array, tap_dx: jax.Array,
+                        out_strides: tuple[int, int, int],
+                        qz: int, qy: int, qx: int,
+                        block_cin: int = 128, block_cout: int = 128,
+                        block_qz: int | None = None,
+                        block_qy: int | None = None,
+                        out_dtype=None, interpret: bool = False
+                        ) -> jax.Array:
+    """Invoke the volumetric kernel.  See module docstring for layout."""
+    b, dp, hp, wp, cin = x_pad.shape
+    p, t, cin_w, cout = w_taps.shape
+    block_qz = qz if block_qz is None else block_qz
+    block_qy = qy if block_qy is None else block_qy
+    assert cin_w == cin, (cin_w, cin)
+    assert cin % block_cin == 0 and cout % block_cout == 0, \
+        (cin, cout, block_cin, block_cout)
+    assert qz % block_qz == 0 and qy % block_qy == 0, \
+        (qz, block_qz, qy, block_qy)
+    n_ci = cin // block_cin
+    n_co = cout // block_cout
+    n_zb = qz // block_qz
+    n_qb = qy // block_qy
+    out_dtype = out_dtype or x_pad.dtype
+    sz, sy, sx = out_strides
+
+    grid = (b, p, n_zb, n_qb, n_co, n_ci)
+    kernel = functools.partial(ganax_conv3d_kernel, bqz=block_qz,
+                               bqy=block_qy, qx=qx, sz=sz, sy=sy, sx=sx,
+                               n_cin_tiles=n_ci)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dp, hp, wp, block_cin),
+                         lambda bi, ph, zb, qb, co, ci, *_:
+                         (bi, 0, 0, 0, ci)),
+            pl.BlockSpec((1, t, block_cin, block_cout),
+                         lambda bi, ph, zb, qb, co, ci, *_:
+                         (ph, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_qz, block_qy, qx, block_cout),
+            lambda bi, ph, zb, qb, co, ci, *_: (bi, ph, zb, qb, 0, co)),
+        scratch_shapes=[pltpu.VMEM((block_qz * block_qy * qx, block_cout),
+                                   jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, p, qz, qy, qx, cout), out_dtype),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary",
+                                 "arbitrary", "arbitrary", "arbitrary"),
+        ),
+    )
+    return fn(n_taps, tap_dz, tap_dy, tap_dx, x_pad, w_taps)

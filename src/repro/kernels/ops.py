@@ -4,6 +4,9 @@ These are the *kernel backends* of the unified dispatch layer
 (`core.dataflow`): ``ganax_conv_transpose`` / ``ganax_conv`` execute one
 (transposed) convolution through the Pallas MIMD-SIMD kernel, either
 compiled for TPU or in interpret mode (exact semantics, Python speed).
+Both ranks the kernel implements — planar (2-D) and volumetric (3-D,
+the 3D-GAN workload) — dispatch from here to the matching
+`kernels.ganax_conv` entry point.
 
 They are registered in `core.dataflow` as the ``pallas-tpu`` and
 ``pallas-interpret`` backends — model code should not call them directly
@@ -23,12 +26,13 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dataflow import (CompiledUops, compile_conv_uops,
                                  compile_uops)
 from repro.core.dataflow import pallas_kernel_supported as kernel_supported
 from repro.core.tconv import interleave_phases
-from repro.kernels.ganax_conv import ganax_conv_pallas
+from repro.kernels.ganax_conv import ganax_conv3d_pallas, ganax_conv_pallas
 
 __all__ = ["ganax_conv_transpose", "ganax_conv", "kernel_supported",
            "default_blocks", "resolve_blocks"]
@@ -41,32 +45,51 @@ def _channel_blocks(cin: int, cout: int) -> tuple[int, int]:
     return bc_in, bc_out
 
 
-def default_blocks(qy: int, cin: int, cout: int) -> tuple[int, int, int]:
-    """The heuristic (block_qy, block_cin, block_cout) used when no tuned
-    plan overrides them: full output-row extent, 128-aligned channels."""
-    return (qy,) + _channel_blocks(cin, cout)
+def _lead_extents(q_lead) -> tuple[int, ...]:
+    """Normalize the tiled leading phase-plane extents: a bare ``qy`` int
+    (2-D) or the ``(qz, qy)`` pair (3-D)."""
+    if isinstance(q_lead, (int, np.integer)):
+        return (int(q_lead),)
+    return tuple(int(v) for v in q_lead)
 
 
-def resolve_blocks(blocks, qy: int, cin: int, cout: int
-                   ) -> tuple[int, int, int]:
-    """Validate an explicit (block_qy, block_cin, block_cout) triple, or
+def default_blocks(q_lead, cin: int, cout: int) -> tuple[int, ...]:
+    """The heuristic block shapes used when no tuned plan overrides them:
+    full leading phase-plane extents, 128-aligned channels.  ``q_lead``
+    is ``qy`` for 2-D layers and ``(qz, qy)`` for volumetric ones, giving
+    ``(block_qy, block_cin, block_cout)`` respectively
+    ``(block_qz, block_qy, block_cin, block_cout)``."""
+    return _lead_extents(q_lead) + _channel_blocks(cin, cout)
+
+
+def resolve_blocks(blocks, q_lead, cin: int, cout: int
+                   ) -> tuple[int, ...]:
+    """Validate explicit kernel tile shapes — the
+    (block_qy, block_cin, block_cout) triple for 2-D layers or the
+    (block_qz, block_qy, block_cin, block_cout) quadruple for 3-D — or
     fall back to :func:`default_blocks` when ``blocks`` is None."""
+    lead = _lead_extents(q_lead)
     if blocks is None:
-        return default_blocks(qy, cin, cout)
+        return default_blocks(lead, cin, cout)
+    names = ("block_qz", "block_qy")[-len(lead):] + \
+        ("block_cin", "block_cout")
+    arity = "triple" if len(names) == 3 else "quadruple"
     try:
-        bqy, bci, bco = (int(v) for v in blocks)
+        vals = tuple(int(v) for v in blocks)
+        if len(vals) != len(names):
+            raise ValueError
     except (TypeError, ValueError):
         raise ValueError(
-            f"blocks must be a (block_qy, block_cin, block_cout) triple, "
+            f"blocks must be a ({', '.join(names)}) {arity}, "
             f"got {blocks!r}") from None
-    if bqy <= 0 or qy % bqy != 0:
-        raise ValueError(f"block_qy={bqy} must divide the phase-plane "
-                         f"height qy={qy}")
-    if bci <= 0 or cin % bci != 0:
-        raise ValueError(f"block_cin={bci} must divide cin={cin}")
-    if bco <= 0 or cout % bco != 0:
-        raise ValueError(f"block_cout={bco} must divide cout={cout}")
-    return bqy, bci, bco
+    planes = {"block_qz": "depth qz", "block_qy": "height qy"}
+    for name, v, extent in zip(names, vals, lead + (cin, cout)):
+        if v <= 0 or extent % v != 0:
+            what = (f"the phase-plane {planes[name]}={extent}"
+                    if name in planes
+                    else f"{name.split('_')[1]}={extent}")
+            raise ValueError(f"{name}={v} must divide {what}")
+    return vals
 
 
 def _gather_weights(w: jax.Array, u: CompiledUops) -> jax.Array:
@@ -74,12 +97,38 @@ def _gather_weights(w: jax.Array, u: CompiledUops) -> jax.Array:
 
     This is the only traced part of the μop prep — it depends on the
     weight *values*; the gather indices themselves are cached."""
-    kh, kw, cin, cout = w.shape
+    cin, cout = w.shape[-2:]
     p, t_max = u.k_idx.shape
-    w_flat = w.reshape(kh * kw, cin, cout)
+    w_flat = w.reshape(-1, cin, cout)
     w_taps = jnp.take(w_flat, jnp.asarray(u.k_idx.reshape(-1)), axis=0)
     w_taps = w_taps.reshape(p, t_max, cin, cout)
     return jnp.where(jnp.asarray(u.valid)[:, :, None, None], w_taps, 0)
+
+
+def _check_rank(nd: int, route: str) -> None:
+    if not kernel_supported(nd):
+        raise ValueError(f"the Pallas kernel supports 2-D and 3-D spatial "
+                         f"inputs, got {nd}-D; route through "
+                         f"dataflow.{route} for automatic fallback")
+
+
+def _kernel_call(x_pad, w_taps, u, *, out_strides, q_sizes, blocks,
+                 out_dtype, interpret):
+    """Dispatch one prepared invocation to the rank-matching kernel."""
+    if len(q_sizes) == 2:
+        bqy, bci, bco = blocks
+        return ganax_conv_pallas(
+            x_pad, w_taps, jnp.asarray(u.n_taps), jnp.asarray(u.tap_dy),
+            jnp.asarray(u.tap_dx), out_strides=out_strides,
+            qy=q_sizes[0], qx=q_sizes[1], block_cin=bci, block_cout=bco,
+            block_qy=bqy, out_dtype=out_dtype, interpret=interpret)
+    bqz, bqy, bci, bco = blocks
+    return ganax_conv3d_pallas(
+        x_pad, w_taps, jnp.asarray(u.n_taps), jnp.asarray(u.tap_dz),
+        jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
+        out_strides=out_strides, qz=q_sizes[0], qy=q_sizes[1],
+        qx=q_sizes[2], block_cin=bci, block_cout=bco, block_qz=bqz,
+        block_qy=bqy, out_dtype=out_dtype, interpret=interpret)
 
 
 def ganax_conv_transpose(x: jax.Array, w: jax.Array,
@@ -88,42 +137,37 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
                          blocks: Sequence[int] | None = None) -> jax.Array:
     """Transposed convolution through the unified GANAX kernel.
 
-    x: (N, H, W, Cin) channels-last; w: (KH, KW, Cin, Cout).
-    ``blocks`` optionally pins the kernel tile shapes as a
-    (block_qy, block_cin, block_cout) triple (each must divide its
-    extent); ``None`` uses the heuristic defaults.
+    x: (N, *spatial, Cin) channels-last; w: (K..., Cin, Cout), with two
+    or three spatial dims.  ``blocks`` optionally pins the kernel tile
+    shapes — (block_qy, block_cin, block_cout) for 2-D,
+    (block_qz, block_qy, block_cin, block_cout) for 3-D; each must
+    divide its extent.  ``None`` uses the heuristic defaults.
     """
     nd = x.ndim - 2
-    if not kernel_supported(nd):
-        raise ValueError(f"the Pallas kernel supports 2-D spatial inputs, "
-                         f"got {nd}-D; route through dataflow.tconv for "
-                         f"automatic fallback")
+    _check_rank(nd, "tconv")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     strides = tuple(strides)
     paddings = tuple(paddings)
-    u = compile_uops(x.shape[1:3], w.shape[:2], strides, paddings)
+    u = compile_uops(x.shape[1:1 + nd], w.shape[:nd], strides, paddings)
     sched = u.schedule
 
-    qy, qx = u.q_sizes
     cin, cout = w.shape[-2], w.shape[-1]
-    bqy, bci, bco = resolve_blocks(blocks, qy, cin, cout)
-    x_pad = jnp.pad(x, ((0, 0), u.pad[0], u.pad[1], (0, 0)))
+    blocks = resolve_blocks(blocks, u.q_sizes[:-1], cin, cout)
+    x_pad = jnp.pad(x, ((0, 0),) + u.pad + ((0, 0),))
     w_taps = _gather_weights(w, u)
 
-    out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(u.n_taps),
-                               jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
-                               out_strides=(1, 1), qy=qy, qx=qx,
-                               block_cin=bci, block_cout=bco, block_qy=bqy,
-                               out_dtype=x.dtype, interpret=interpret)
-    # out_pm: (B, P, Qy, Qx, Cout) in schedule.phase_order; interleave.
+    out_pm = _kernel_call(x_pad, w_taps, u, out_strides=(1,) * nd,
+                          q_sizes=u.q_sizes, blocks=blocks,
+                          out_dtype=x.dtype, interpret=interpret)
+    # out_pm: (B, P, *Q, Cout) in schedule.phase_order; interleave.
     phase_planes = {}
     for row, flat in enumerate(sched.phase_order):
         phases = sched.phase_tuple(flat)
-        oy, ox = (pd.out_size for pd in sched.phase_dims(flat))
-        phase_planes[phases] = out_pm[:, row, :oy, :ox, :]
+        crop = tuple(slice(0, pd.out_size) for pd in sched.phase_dims(flat))
+        phase_planes[phases] = out_pm[(slice(None), row) + crop]
     if sched.n_phases == 1:
-        return phase_planes[(0, 0)]
+        return phase_planes[(0,) * nd]
     return interleave_phases(phase_planes, sched)
 
 
@@ -134,24 +178,19 @@ def ganax_conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
     """Plain (strided) convolution through the same kernel — the paper's
     SIMD mode: a single phase whose taps are the full kernel."""
     nd = x.ndim - 2
-    if not kernel_supported(nd):
-        raise ValueError(f"the Pallas kernel supports 2-D spatial inputs, "
-                         f"got {nd}-D; route through dataflow.conv for "
-                         f"automatic fallback")
+    _check_rank(nd, "conv")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     strides = tuple(strides)
     paddings = tuple(paddings)
-    u = compile_conv_uops(x.shape[1:3], w.shape[:2], strides, paddings)
+    u = compile_conv_uops(x.shape[1:1 + nd], w.shape[:nd], strides,
+                          paddings)
 
-    kh, kw, cin, cout = w.shape
-    qy, qx = u.out_sizes
-    x_pad = jnp.pad(x, ((0, 0), u.pad[0], u.pad[1], (0, 0)))
-    w_taps = w.reshape(1, kh * kw, cin, cout)
-    bqy, bci, bco = resolve_blocks(blocks, qy, cin, cout)
-    out_pm = ganax_conv_pallas(x_pad, w_taps, jnp.asarray(u.n_taps),
-                               jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
-                               out_strides=tuple(strides), qy=qy, qx=qx,
-                               block_cin=bci, block_cout=bco, block_qy=bqy,
-                               out_dtype=x.dtype, interpret=interpret)
+    cin, cout = w.shape[-2], w.shape[-1]
+    x_pad = jnp.pad(x, ((0, 0),) + u.pad + ((0, 0),))
+    w_taps = w.reshape(1, -1, cin, cout)
+    blocks = resolve_blocks(blocks, u.out_sizes[:-1], cin, cout)
+    out_pm = _kernel_call(x_pad, w_taps, u, out_strides=strides,
+                          q_sizes=u.out_sizes, blocks=blocks,
+                          out_dtype=x.dtype, interpret=interpret)
     return out_pm[:, 0]

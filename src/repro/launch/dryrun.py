@@ -25,8 +25,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs.base import SHAPES, cell_supported, get_config, \
     list_configs
 from repro.launch.mesh import POD_STRIDE, make_production_mesh

@@ -14,7 +14,7 @@ Shape semantics (per the assignment):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

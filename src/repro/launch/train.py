@@ -16,7 +16,6 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.data.pipeline import SyntheticLM, make_batch_fn

@@ -22,9 +22,6 @@ Implementations:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax import lax

@@ -24,7 +24,6 @@ already warm).  The resolved per-layer plans are exposed in ``repr``.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataflow import DataflowPolicy

@@ -19,12 +19,9 @@ perf harness; correctness is locked by tests/test_collective_matmul.py).
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map

@@ -15,7 +15,6 @@ for KV-cache compression experiments.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -26,6 +26,7 @@ import itertools
 from typing import Sequence
 
 import jax
+import numpy as np
 
 from repro.core.dataflow import (backend_supports, compile_conv_uops,
                                  compile_uops)
@@ -45,10 +46,12 @@ MAX_BLOCK_CANDIDATES = 12
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One runnable configuration: backend + optional Pallas blocks."""
+    """One runnable configuration: backend + optional Pallas blocks
+    (a (qy, cin, cout) triple for 2-D layers, (qz, qy, cin, cout) for
+    volumetric ones)."""
 
     backend: str
-    blocks: tuple[int, int, int] | None = None
+    blocks: tuple[int, ...] | None = None
 
     def describe(self) -> str:
         if self.blocks is None:
@@ -74,46 +77,50 @@ def _divisor_options(extent: int, preferred: Sequence[int]) -> list[int]:
     return opts
 
 
-def _pallas_geometry(key: PlanKey) -> tuple[int, int, int, int, int]:
-    """(qy, qx, taps, hp, wp) of the kernel invocation for ``key``."""
+def _pallas_geometry(key: PlanKey
+                     ) -> tuple[tuple[int, ...], int, tuple[int, ...]]:
+    """(q_sizes, taps, padded_spatial) of the kernel invocation for
+    ``key`` — rank-generic: 2-D rows or 3-D (planes, rows)."""
     if key.kind == "tconv":
         u = compile_uops(key.in_spatial, key.kernel, key.strides,
                          key.paddings)
-        qy, qx = u.q_sizes
+        q_sizes = u.q_sizes
         taps = u.tap_dy.shape[1]
-        pad = u.pad
     else:
         u = compile_conv_uops(key.in_spatial, key.kernel, key.strides,
                               key.paddings)
-        qy, qx = u.out_sizes
-        taps = key.kernel[0] * key.kernel[1]
-        pad = u.pad
-    hp = key.in_spatial[0] + pad[0][0] + pad[0][1]
-    wp = key.in_spatial[1] + pad[1][0] + pad[1][1]
-    return qy, qx, taps, hp, wp
+        q_sizes = u.out_sizes
+        taps = int(np.prod(key.kernel))
+    padded = tuple(i + lo + hi
+                   for i, (lo, hi) in zip(key.in_spatial, u.pad))
+    return q_sizes, taps, padded
 
 
-def _vmem_bytes(key: PlanKey, qx: int, taps: int, hp: int, wp: int,
-                blocks: tuple[int, int, int]) -> int:
-    bqy, bci, bco = blocks
+def _vmem_bytes(key: PlanKey, q_sizes: tuple[int, ...], taps: int,
+                padded: tuple[int, ...], blocks: tuple[int, ...]) -> int:
+    lead, (bci, bco) = blocks[:-2], blocks[-2:]
     itemsize = jax.numpy.dtype(key.dtype).itemsize
-    x_blk = hp * wp * bci * itemsize
+    rows = int(np.prod(lead)) * q_sizes[-1]
+    x_blk = int(np.prod(padded)) * bci * itemsize
     w_blk = taps * bci * bco * itemsize
-    out_blk = bqy * qx * bco * itemsize
-    acc = bqy * qx * bco * 4  # f32 accumulator scratch
+    out_blk = rows * bco * itemsize
+    acc = rows * bco * 4  # f32 accumulator scratch
     return x_blk + w_blk + out_blk + acc
 
 
 def _pallas_candidates(key: PlanKey, backend: str) -> list[Candidate]:
-    qy, qx, taps, hp, wp = _pallas_geometry(key)
-    dflt = default_blocks(qy, key.cin, key.cout)
-    bqy_opts = _divisor_options(qy, [dflt[0], 16, 8, 4])
-    bci_opts = _divisor_options(key.cin, [dflt[1], 256, 128, 64])
-    bco_opts = _divisor_options(key.cout, [dflt[2], 256, 128, 64])
+    q_sizes, taps, padded = _pallas_geometry(key)
+    dflt = default_blocks(q_sizes[:-1], key.cin, key.cout)
+    # one tiled option list per leading phase-plane extent: qy for 2-D,
+    # (qz, qy) for the volumetric sweep
+    lead_opts = [_divisor_options(extent, [d, 16, 8, 4])
+                 for extent, d in zip(q_sizes[:-1], dflt[:-2])]
+    bci_opts = _divisor_options(key.cin, [dflt[-2], 256, 128, 64])
+    bco_opts = _divisor_options(key.cout, [dflt[-1], 256, 128, 64])
     out = [Candidate(backend, dflt)]
-    for blocks in itertools.product(bqy_opts, bci_opts, bco_opts):
+    for blocks in itertools.product(*lead_opts, bci_opts, bco_opts):
         if blocks == dflt or \
-                _vmem_bytes(key, qx, taps, hp, wp, blocks) > \
+                _vmem_bytes(key, q_sizes, taps, padded, blocks) > \
                 VMEM_BUDGET_BYTES:
             continue
         out.append(Candidate(backend, blocks))

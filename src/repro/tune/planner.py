@@ -96,7 +96,8 @@ class Plan:
     """The chosen execution path for one :class:`PlanKey`."""
 
     backend: str
-    blocks: tuple[int, int, int] | None = None  # Pallas tile shapes
+    blocks: tuple[int, ...] | None = None   # Pallas tile shapes: a
+    # (qy, cin, cout) triple for 2-D layers, (qz, qy, cin, cout) for 3-D
     measured_us: float | None = None            # winning median wall-clock
     source: str = "measured"                    # "measured" | "heuristic"
 
@@ -114,7 +115,7 @@ class Plan:
         blocks = d.get("blocks")
         if blocks is not None:
             blocks = tuple(int(v) for v in blocks)
-            if len(blocks) != 3:
+            if len(blocks) not in (3, 4):   # 2-D triple / 3-D quadruple
                 raise ValueError(f"bad plan blocks: {blocks!r}")
         us = d.get("measured_us")
         return cls(backend=backend, blocks=blocks,

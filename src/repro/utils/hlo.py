@@ -26,11 +26,9 @@ Model:
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import re
 from collections import defaultdict
-from typing import Any
 
 __all__ = ["HloCost", "analyze_hlo"]
 

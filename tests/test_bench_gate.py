@@ -1,0 +1,122 @@
+"""CI bench regression gate (`benchmarks/check_regression.py`): metric
+extraction, per-model threshold comparison in both metric directions,
+missing-model coverage failure, the override env, and --update."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks import check_regression as cr  # noqa: E402
+
+DATAFLOW = {
+    "dcgan": {"polyphase_us": 1000.0, "zero_insert_us": 2000.0,
+              "wallclock_speedup": 2.0},
+    "3dgan": {"polyphase_us": 9000.0, "zero_insert_us": 63000.0,
+              "wallclock_speedup": 7.0},
+}
+TUNE = {
+    "dcgan": {"generator_tuned_us": 500.0,
+              "generator_heuristic_us": 550.0},
+    "_meta": {"repeats": 3},
+}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_extract_gated_metrics_only():
+    fresh = cr.extract(DATAFLOW, TUNE)
+    assert fresh["dataflow"]["3dgan"] == {"polyphase_us": 9000.0,
+                                          "wallclock_speedup": 7.0}
+    assert fresh["tune"] == {"dcgan": {"generator_tuned_us": 500.0}}
+    assert "_meta" not in fresh["tune"]          # meta rows never gate
+    # null / non-numeric metric values are dropped, not compared
+    assert cr.extract({"m": {"polyphase_us": None}}, {}) == \
+        {"dataflow": {}, "tune": {}}
+
+
+def test_compare_directions_and_threshold():
+    base = cr.extract(DATAFLOW, TUNE)
+    fresh = json.loads(json.dumps(base))         # deep copy
+    # wall-clock ("lower is better"): +30% is a regression, -30% is not
+    fresh["dataflow"]["dcgan"]["polyphase_us"] = 1300.0
+    fresh["tune"]["dcgan"]["generator_tuned_us"] = 350.0
+    # ratio ("higher is better"): dropping 7.0 -> 5.0 is a regression
+    fresh["dataflow"]["3dgan"]["wallclock_speedup"] = 5.0
+    failures, lines = cr.compare(base, fresh, threshold=0.25)
+    assert len(failures) == 2
+    assert any("dcgan/polyphase_us" in f for f in failures)
+    assert any("3dgan/wallclock_speedup" in f for f in failures)
+    # within-threshold and improved metrics pass
+    failures, _ = cr.compare(base, base, threshold=0.25)
+    assert failures == []
+
+
+def test_compare_missing_model_fails():
+    base = cr.extract(DATAFLOW, TUNE)
+    fresh = json.loads(json.dumps(base))
+    del fresh["dataflow"]["3dgan"]
+    failures, _ = cr.compare(base, fresh, threshold=0.25)
+    assert any("missing" in f for f in failures)
+    # the reverse (a new model) reports but does not fail
+    failures, lines = cr.compare(fresh, base, threshold=0.25)
+    assert failures == [] and any("new" in ln for ln in lines)
+
+
+def test_main_update_then_green_gate(tmp_path, capsys):
+    df = _write(tmp_path, "BENCH_dataflow.json", DATAFLOW)
+    tn = _write(tmp_path, "BENCH_tune.json", TUNE)
+    bl = str(tmp_path / "BENCH_baseline.json")
+    assert cr.main(["--baseline", bl, "--dataflow", df, "--tune", tn,
+                    "--update"]) == 0
+    assert json.loads(Path(bl).read_text())["threshold"] == 0.25
+    assert cr.main(["--baseline", bl, "--dataflow", df,
+                    "--tune", tn]) == 0
+    assert "No regressions" in capsys.readouterr().out
+
+
+def test_main_regression_fails_and_override_passes(tmp_path, capsys,
+                                                   monkeypatch):
+    df = _write(tmp_path, "BENCH_dataflow.json", DATAFLOW)
+    tn = _write(tmp_path, "BENCH_tune.json", TUNE)
+    bl = str(tmp_path / "BENCH_baseline.json")
+    cr.main(["--baseline", bl, "--dataflow", df, "--tune", tn, "--update"])
+    slow = json.loads(json.dumps(DATAFLOW))
+    slow["dcgan"]["polyphase_us"] *= 2            # 2x slowdown
+    df2 = _write(tmp_path, "BENCH_dataflow2.json", slow)
+
+    monkeypatch.delenv("BENCH_GATE_OVERRIDE", raising=False)
+    assert cr.main(["--baseline", bl, "--dataflow", df2,
+                    "--tune", tn]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "bench-regression-override" in out
+
+    monkeypatch.setenv("BENCH_GATE_OVERRIDE", "1")
+    assert cr.main(["--baseline", bl, "--dataflow", df2,
+                    "--tune", tn]) == 0
+    assert "not failing the job" in capsys.readouterr().out
+    # "0" means unset, matching the workflow's ternary expression
+    monkeypatch.setenv("BENCH_GATE_OVERRIDE", "0")
+    assert cr.main(["--baseline", bl, "--dataflow", df2,
+                    "--tune", tn]) == 1
+    capsys.readouterr()
+
+
+@pytest.mark.parametrize("threshold,rc", [(0.9, 0), (0.1, 1)])
+def test_main_threshold_flag(tmp_path, capsys, threshold, rc):
+    df = _write(tmp_path, "BENCH_dataflow.json", DATAFLOW)
+    tn = _write(tmp_path, "BENCH_tune.json", TUNE)
+    bl = str(tmp_path / "BENCH_baseline.json")
+    cr.main(["--baseline", bl, "--dataflow", df, "--tune", tn, "--update"])
+    slow = json.loads(json.dumps(DATAFLOW))
+    slow["dcgan"]["polyphase_us"] *= 1.5          # +50% slowdown
+    df2 = _write(tmp_path, "BENCH_dataflow2.json", slow)
+    assert cr.main(["--baseline", bl, "--dataflow", df2, "--tune", tn,
+                    "--threshold", str(threshold)]) == rc
+    capsys.readouterr()

@@ -86,24 +86,109 @@ def test_conv_grad_parity(backend, xs, ws, s, p):
                                atol=1e-4, rtol=1e-4)
 
 
-def test_tconv_grad_parity_3d():
-    """The pallas preference must fall back to polyphase for 3-D and stay
-    differentiable (the 3D-GAN training path)."""
-    rng = np.random.default_rng(3)
-    x = jnp.asarray(rng.normal(size=(1, 3, 3, 3, 2)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(4, 4, 4, 2, 3)), jnp.float32)
-    s, p = (2, 2, 2), (1, 1, 1)
+# 3-D (volumetric) cases — strides {1,2,3}, mixed strides, kernel<stride.
+TCONV3D_CASES = [
+    ((1, 3, 3, 3, 2), (3, 3, 3, 2, 3), (1, 1, 1), (1, 1, 1)),
+    ((1, 3, 3, 3, 2), (4, 4, 4, 2, 3), (2, 2, 2), (1, 1, 1)),
+    ((1, 3, 2, 3, 2), (3, 4, 3, 2, 2), (3, 2, 1), (1, 1, 0)),
+    ((1, 2, 2, 2, 2), (2, 2, 2, 2, 3), (3, 3, 3), (0, 0, 0)),
+]
+
+CONV3D_CASES = [
+    ((1, 5, 5, 5, 2), (3, 3, 3, 2, 3), (1, 1, 1), (1, 1, 1)),
+    ((1, 6, 6, 6, 2), (4, 4, 4, 2, 3), (2, 2, 2), (1, 1, 1)),
+    ((1, 7, 5, 7, 2), (3, 3, 3, 2, 2), (3, 2, 3), (0, 1, 0)),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("xs,ws,s,p", TCONV3D_CASES)
+def test_tconv_grad_parity_3d(backend, xs, ws, s, p):
+    """Volumetric grad parity: the 3-D Pallas kernel's custom VJP (and
+    the pure-JAX backends) must match XLA's autodiff through the
+    zero-insertion reference — the 3D-GAN training path."""
+    rng = np.random.default_rng(hash((xs, ws, s, p)) % 2**31)
+    x = jnp.asarray(rng.normal(size=xs), jnp.float32)
+    w = jnp.asarray(rng.normal(size=ws), jnp.float32)
     ref = tconv_zero_insert(x, w, s, p)
     cot = jnp.asarray(rng.normal(size=ref.shape), jnp.float32)
     gx_ref, gw_ref = _grads(lambda x, w: tconv_zero_insert(x, w, s, p),
                             x, w, cot)
-    policy = DataflowPolicy(backend="pallas")
+    policy = DataflowPolicy(backend=backend)
+    out = tconv(x, w, s, p, policy=policy)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
     gx, gw = _grads(lambda x, w: tconv(x, w, s, p, policy=policy),
                     x, w, cot)
     np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
                                atol=1e-4, rtol=1e-4)
     np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
                                atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("xs,ws,s,p", CONV3D_CASES)
+def test_conv_grad_parity_3d(backend, xs, ws, s, p):
+    rng = np.random.default_rng(hash((xs, ws, s, p)) % 2**31)
+    x = jnp.asarray(rng.normal(size=xs), jnp.float32)
+    w = jnp.asarray(rng.normal(size=ws), jnp.float32)
+    ref = conv_ref(x, w, s, p)
+    cot = jnp.asarray(rng.normal(size=ref.shape), jnp.float32)
+    gx_ref, gw_ref = _grads(lambda x, w: conv_ref(x, w, s, p), x, w, cot)
+    policy = DataflowPolicy(backend=backend)
+    out = conv(x, w, s, p, policy=policy)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    gx, gw = _grads(lambda x, w: conv(x, w, s, p, policy=policy),
+                    x, w, cot)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_3dgan_layers_pallas_forward_and_vjp_parity():
+    """Acceptance: every 3D-GAN generator/discriminator layer geometry
+    (channel-scaled for CPU) runs the volumetric Pallas kernel in
+    interpret mode with forward and VJP matching the polyphase and
+    zero-insert references."""
+    from repro.configs.gans import gan_layers
+
+    g_layers, d_layers = gan_layers("3dgan")
+    scale = 1 / 16
+    interp = DataflowPolicy(backend="pallas-interpret")
+    poly = DataflowPolicy(backend="polyphase")
+    for layer in g_layers + d_layers:
+        cin = max(1, int(layer.cin * scale))
+        cout = max(1, int(layer.cout * scale))
+        rng = np.random.default_rng(layer.cin * 31 + layer.cout)
+        x = jnp.asarray(rng.normal(size=(1, *layer.in_spatial, cin)),
+                        jnp.float32)
+        w = jnp.asarray(rng.normal(size=(*layer.kernel, cin, cout)),
+                        jnp.float32)
+        s, p = layer.strides, layer.paddings
+        if layer.transposed:
+            op, ref_fn = tconv, tconv_zero_insert
+        else:
+            op, ref_fn = conv, conv_ref
+        ref = ref_fn(x, w, s, p)
+        got = op(x, w, s, p, policy=interp)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-3, rtol=1e-3,
+                                   err_msg=f"forward {layer.name}")
+        np.testing.assert_allclose(
+            np.asarray(op(x, w, s, p, policy=poly)), np.asarray(ref),
+            atol=1e-3, rtol=1e-3, err_msg=f"polyphase {layer.name}")
+        cot = jnp.asarray(rng.normal(size=ref.shape), jnp.float32)
+        gx_ref, gw_ref = _grads(lambda x, w: ref_fn(x, w, s, p), x, w, cot)
+        gx, gw = _grads(lambda x, w: op(x, w, s, p, policy=interp),
+                        x, w, cot)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                                   atol=1e-3, rtol=1e-3,
+                                   err_msg=f"dx {layer.name}")
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
+                                   atol=1e-3, rtol=1e-3,
+                                   err_msg=f"dw {layer.name}")
 
 
 @pytest.mark.parametrize("op", [tconv, conv])
@@ -164,21 +249,25 @@ def test_uop_cache_hit_on_repeated_geometry():
 
 def test_policy_resolution():
     """Resolution contract on a CPU host: auto → polyphase, "pallas" →
-    interpret with rank fallback, interpret override implies the kernel,
-    strict names raise on unsupported ranks."""
+    interpret for both kernel ranks (2-D and now 3-D) with a polyphase
+    fallback for ranks the kernel doesn't implement (1-D), interpret
+    override implies the kernel, strict names raise on unsupported
+    ranks."""
     assert DataflowPolicy().resolve(2) == "polyphase"
     assert DataflowPolicy(backend="pallas").resolve(2) == "pallas-interpret"
-    assert DataflowPolicy(backend="pallas").resolve(3) == "polyphase"
+    assert DataflowPolicy(backend="pallas").resolve(3) == "pallas-interpret"
+    assert DataflowPolicy(backend="pallas").resolve(1) == "polyphase"
     assert DataflowPolicy(interpret=True).resolve(2) == "pallas-interpret"
-    assert DataflowPolicy(interpret=True).resolve(3) == "polyphase"
+    assert DataflowPolicy(interpret=True).resolve(3) == "pallas-interpret"
+    assert DataflowPolicy(interpret=True).resolve(1) == "polyphase"
     assert DataflowPolicy(backend="pallas",
-                          interpret=True).resolve(3) == "polyphase"
+                          interpret=True).resolve(1) == "polyphase"
     assert DataflowPolicy(backend="pallas-interpret",
-                          interpret=True).resolve(2) == "pallas-interpret"
+                          interpret=True).resolve(3) == "pallas-interpret"
     with pytest.raises(ValueError, match="available"):
         DataflowPolicy(backend="pallus").resolve(2)
     with pytest.raises(ValueError, match="support"):
-        DataflowPolicy(backend="pallas-interpret").resolve(3)
+        DataflowPolicy(backend="pallas-interpret").resolve(1)
     with pytest.raises(ValueError, match="contradicts"):
         DataflowPolicy(backend="polyphase", interpret=True).resolve(2)
     with pytest.raises(ValueError, match="contradicts"):

@@ -9,7 +9,6 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import pytest
 
 from repro.sharding.rules import Rules, spec_for_axes

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs.gans import GAN_MODELS
-from repro.models.gan import (GanConfig, discriminator_apply, gan_losses,
-                              generator_apply, init_gan)
+from repro.models.gan import (GanConfig, gan_losses, generator_apply,
+                              init_gan)
 
 
 @pytest.mark.parametrize("name", sorted(GAN_MODELS))

@@ -6,7 +6,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.scheduler import make_schedule, transposed_conv_output_size
+from repro.core.scheduler import (  # noqa: E402
+    make_schedule, transposed_conv_output_size)
 
 geom = st.tuples(
     st.integers(2, 9),    # in_size

@@ -11,9 +11,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 from jax import lax  # noqa: E402
 
-from repro.core.scheduler import make_schedule
-from repro.core.tconv import (tconv_ganax, tconv_output_shape,
-                              tconv_zero_insert, zero_insert)
+from repro.core.scheduler import make_schedule  # noqa: E402
+from repro.core.tconv import (  # noqa: E402
+    tconv_ganax, tconv_output_shape, tconv_zero_insert, zero_insert)
 
 
 def xla_ref(x, w, s, p):

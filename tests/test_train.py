@@ -16,7 +16,7 @@ from repro.models import transformer as tr
 from repro.train import checkpoint as ckpt
 from repro.train.compress import (dequantize_int8, make_int8_grad_transform,
                                   quantize_int8)
-from repro.train.loop import InjectedFailure, LoopConfig, TrainLoop
+from repro.train.loop import LoopConfig, TrainLoop
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, \
     cosine_schedule
 from repro.train.train_state import init_train_state, make_train_step

@@ -67,13 +67,32 @@ def test_candidates_pallas_blocks_valid_divisors():
 
 
 def test_candidates_respect_rank_support():
-    key3d = PlanKey(kind="tconv", batch=1, in_spatial=(3, 3, 3),
-                    kernel=(4, 4, 4), strides=(2, 2, 2),
-                    paddings=(1, 1, 1), cin=2, cout=3,
+    """1-D layers stay outside the kernel's rank coverage: the Pallas
+    backends must not appear in the candidate pool."""
+    key1d = PlanKey(kind="tconv", batch=1, in_spatial=(5,), kernel=(4,),
+                    strides=(2,), paddings=(1,), cin=2, cout=3,
                     dtype="float32", platform="cpu")
-    cands = enumerate_candidates(key3d,
+    cands = enumerate_candidates(key1d,
                                  backends=["pallas-interpret", "polyphase"])
     assert [c.backend for c in cands] == ["polyphase"]
+
+
+def test_candidates_3d_blocks_valid_divisors():
+    """The volumetric sweep: 3-D Pallas candidates carry
+    (block_qz, block_qy, block_cin, block_cout) quadruples whose leading
+    extents divide the phase-plane grid."""
+    key3d = PlanKey(kind="tconv", batch=1, in_spatial=(8, 8, 8),
+                    kernel=(4, 4, 4), strides=(2, 2, 2),
+                    paddings=(1, 1, 1), cin=64, cout=32,
+                    dtype="float32", platform="cpu")
+    cands = enumerate_candidates(key3d, backends=["pallas-interpret"])
+    assert cands[0].blocks is not None       # default blocks come first
+    qz = qy = 8  # ceil(16/2): phase-plane extents of the 8→16 upsample
+    for c in cands:
+        bqz, bqy, bci, bco = c.blocks
+        assert qz % bqz == 0 and qy % bqy == 0
+        assert 64 % bci == 0 and 32 % bco == 0
+    assert len({c.blocks for c in cands}) == len(cands) > 1
 
 
 # ---------------------------------------------------------------------------
@@ -240,19 +259,45 @@ def test_auto_plan_miss_falls_back_to_heuristic():
 def test_auto_stale_plan_backend_falls_back():
     """A plan naming a backend that can't run this rank degrades to the
     heuristic instead of raising (stale plan files must never break
-    dispatch)."""
-    key3d = PlanKey(kind="tconv", batch=1, in_spatial=(3, 3, 3),
-                    kernel=(2, 2, 2), strides=(2, 2, 2),
-                    paddings=(0, 0, 0), cin=2, cout=3,
+    dispatch).  1-D is the rank the kernel doesn't cover."""
+    key1d = PlanKey(kind="tconv", batch=1, in_spatial=(3,), kernel=(2,),
+                    strides=(2,), paddings=(0,), cin=2, cout=3,
                     dtype="float32", platform="cpu")
     planner = set_planner(Planner())
-    planner.put(key3d, Plan(backend="pallas-interpret"))  # 2-D only
+    planner.put(key1d, Plan(backend="pallas-interpret"))  # 2-D/3-D only
     rng = np.random.default_rng(1)
-    x = jnp.asarray(rng.normal(size=(1, 3, 3, 3, 2)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(2, 2, 2, 2, 3)), jnp.float32)
-    out = tconv(x, w, key3d.strides, key3d.paddings,
+    x = jnp.asarray(rng.normal(size=(1, 3, 2)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 3)), jnp.float32)
+    out = tconv(x, w, key1d.strides, key1d.paddings,
                 policy=DataflowPolicy(backend="auto"))
-    assert out.shape == (1, 6, 6, 6, 3)
+    assert out.shape == (1, 6, 3)
+
+
+def test_auto_uses_tuned_3d_pallas_blocks():
+    """A volumetric plan carrying a (qz, qy, cin, cout) quadruple reaches
+    the 3-D kernel through auto dispatch, survives a JSON round-trip, and
+    stays differentiable."""
+    key3d = PlanKey(kind="tconv", batch=1, in_spatial=(3, 3, 3),
+                    kernel=(4, 4, 4), strides=(2, 2, 2),
+                    paddings=(1, 1, 1), cin=2, cout=3,
+                    dtype="float32", platform="cpu")
+    plan = Plan(backend="pallas-interpret", blocks=(1, 3, 2, 3))
+    assert Plan.from_json(plan.to_json()) == plan
+    planner = set_planner(Planner())
+    planner.put(key3d, plan)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(1, 3, 3, 3, 2)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 4, 4, 2, 3)), jnp.float32)
+    policy = DataflowPolicy(backend="auto")
+    ref = tconv(x, w, key3d.strides, key3d.paddings,
+                policy=DataflowPolicy(backend="zero-insert"))
+    np.testing.assert_allclose(
+        np.asarray(tconv(x, w, key3d.strides, key3d.paddings,
+                         policy=policy)),
+        np.asarray(ref), atol=1e-4, rtol=1e-4)
+    gx = jax.grad(lambda x: jnp.sum(tconv(
+        x, w, key3d.strides, key3d.paddings, policy=policy) ** 2))(x)
+    assert gx.shape == x.shape and planner.hits >= 1
 
 
 def test_auto_stale_plan_blocks_fall_back():

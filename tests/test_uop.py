@@ -9,8 +9,7 @@ import pytest
 
 from repro.core.scheduler import make_schedule
 from repro.core.tconv import tconv_ganax, zero_insert
-from repro.core.uop import (GanaxMachine, StridedIndexGenerator,
-                            run_tconv_on_machine)
+from repro.core.uop import StridedIndexGenerator, run_tconv_on_machine
 
 CASES = [
     (4, 4, 5, 2, 2, 4, 4),
