@@ -10,6 +10,11 @@ threshold (default 25%):
 * ``dataflow.<model>.wallclock_speedup`` — zero-insert/polyphase ratio,
   higher is better.  Machine-relative (both sides measured in the same
   run), so it stays meaningful even when the runner class changes;
+* ``dataflow.<model>.fused_us`` — the fused-epilogue generator-layer
+  wall-clock (bias+activation inside the unified op), gated against
+  its own baseline like the other wall-clock rows (the informational
+  ``unfused_us`` / ``fused_speedup`` columns track the same-run
+  fused-vs-unfused ratio but do not gate);
 * ``tune.<model>.generator_tuned_us`` — the tuned end-to-end generator.
 
 Faster-than-baseline results always pass (speedups are the point); a
@@ -48,6 +53,7 @@ import sys
 GATED_METRICS = (
     ("dataflow", "polyphase_us", "lower"),
     ("dataflow", "wallclock_speedup", "higher"),
+    ("dataflow", "fused_us", "lower"),
     ("tune", "generator_tuned_us", "lower"),
 )
 DEFAULT_THRESHOLD = 0.25
@@ -89,6 +95,8 @@ def compare(baseline: dict, fresh: dict, threshold: float
             name = f"{section}/{model}/{metric}"
             base = base_models.get(model, {}).get(metric)
             new = fresh_models.get(model, {}).get(metric)
+            if base is None and new is None:
+                continue    # metric not tracked for this model
             if base is None:
                 lines.append(f"| {name} | - | {new:,.2f} | new | - |")
                 continue

@@ -33,6 +33,18 @@ repo.  It owns three things:
    already zero-skipping — the backward of a phase conv is a phase
    conv).
 
+4. **Fused epilogue** — an :class:`Epilogue` (bias add + activation)
+   is a first-class argument of :func:`tconv` / :func:`conv`.  On the
+   kernel backends it executes inside the Pallas accumulator flush, so
+   the raw accumulator never round-trips through HBM just to have two
+   elementwise ops applied; the pure-JAX backends apply the identical
+   epilogue after the op (XLA fuses it natively), keeping all four
+   backends bit-comparable.  Fused configs stay trainable: the fused
+   custom VJP recovers the activation derivative from the *saved
+   output* (``relu``/``leaky_relu``/``tanh`` are all invertible-slope
+   activations) and reduces the pre-activation cotangent into the bias
+   gradient, so no pre-activation tensor is ever materialized.
+
 Geometry semantics are PyTorch ``ConvTranspose`` / correlation-conv
 throughout (channels-last ``x``, ``(K..., Cin, Cout)`` weights), matching
 ``core.tconv`` and ``core.scheduler``.
@@ -42,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -54,6 +67,8 @@ from repro.core.tconv import tconv_ganax, tconv_zero_insert
 __all__ = [
     "Backend",
     "DataflowPolicy",
+    "Epilogue",
+    "ACTIVATIONS",
     "pallas_kernel_supported",
     "backend_supports",
     "CompiledUops",
@@ -68,6 +83,114 @@ __all__ = [
     "conv",
     "SecondOrderNotImplemented",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue spec.
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = ("none", "relu", "leaky_relu", "tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Per-layer epilogue fused into the unified (t)conv op.
+
+    ``bias`` adds a per-output-channel bias vector (supplied as the
+    ``bias=`` argument of :func:`tconv` / :func:`conv`); ``activation``
+    is applied after it.  On the kernel backends both run inside the
+    Pallas accumulator flush; the pure-JAX backends apply :meth:`apply`
+    after the op, so every backend computes the same function.
+
+    The spec is hashable (safe as a static jit / ``custom_vjp`` nondiff
+    argument and as part of an autotuner plan key).  ``leaky_slope`` is
+    canonicalized to the default for non-leaky activations so two specs
+    that compute the same function compare (and hash) equal.
+    """
+
+    bias: bool = False
+    activation: str = "none"
+    leaky_slope: float = 0.2
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown epilogue activation "
+                             f"{self.activation!r}; one of {ACTIVATIONS}")
+        slope = 0.2 if self.activation != "leaky_relu" \
+            else float(self.leaky_slope)
+        if not slope >= 0:
+            # grad_from_output recovers the leaky derivative from the
+            # output's sign, which requires a sign-preserving slope
+            raise ValueError(f"leaky_slope must be >= 0, got {slope}")
+        object.__setattr__(self, "leaky_slope", slope)
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.bias and self.activation == "none"
+
+    def apply(self, y: jax.Array, bias: jax.Array | None = None
+              ) -> jax.Array:
+        """Reference (pure-JAX) application — the function the kernel
+        backends fuse into their flush step."""
+        if self.bias:
+            y = y + bias
+        if self.activation == "relu":
+            y = jax.nn.relu(y)
+        elif self.activation == "leaky_relu":
+            y = jax.nn.leaky_relu(y, self.leaky_slope)
+        elif self.activation == "tanh":
+            y = jnp.tanh(y)
+        return y
+
+    def grad_from_output(self, y: jax.Array) -> jax.Array:
+        """The activation derivative recovered from the saved *output*
+        ``y = act(z)`` — every supported activation is sign-preserving
+        (relu/leaky) or smoothly invertible (tanh: act' = 1 - y²), so
+        the fused VJP never needs the pre-activation tensor."""
+        if self.activation == "relu":
+            return (y > 0).astype(y.dtype)
+        if self.activation == "leaky_relu":
+            return jnp.where(y > 0, jnp.ones_like(y),
+                             jnp.asarray(self.leaky_slope, y.dtype))
+        if self.activation == "tanh":
+            return 1.0 - jnp.square(y)
+        return jnp.ones_like(y)
+
+    def key_fields(self) -> dict:
+        """The epilogue's contribution to an autotuner plan key."""
+        return {"bias": self.bias, "activation": self.activation,
+                "leaky_slope": self.leaky_slope}
+
+    def describe(self) -> str:
+        parts = []
+        if self.activation != "none":
+            parts.append(self.activation
+                         if self.activation != "leaky_relu"
+                         else f"leaky_relu({self.leaky_slope:g})")
+        if self.bias:
+            parts.append("bias")
+        return "+".join(parts) or "none"
+
+
+_IDENTITY_EPILOGUE = Epilogue()
+
+
+def _canonical_epilogue(epilogue: Epilogue | None,
+                        bias: jax.Array | None, w: jax.Array
+                        ) -> Epilogue:
+    """Validate the (epilogue, bias) pair of one dispatch; a bare
+    ``bias=`` array with no epilogue means a plain fused bias add."""
+    if epilogue is None:
+        epilogue = Epilogue(bias=True) if bias is not None \
+            else _IDENTITY_EPILOGUE
+    if epilogue.bias and bias is None:
+        raise ValueError("epilogue.bias=True but no bias= array passed")
+    if not epilogue.bias and bias is not None:
+        raise ValueError("bias= passed but epilogue.bias=False")
+    if bias is not None and tuple(bias.shape) != (w.shape[-1],):
+        raise ValueError(f"bias must have shape (cout,)=({w.shape[-1]},), "
+                         f"got {tuple(bias.shape)}")
+    return epilogue
 
 
 # ---------------------------------------------------------------------------
@@ -264,11 +387,11 @@ def _tconv_polyphase(x, w, strides, paddings):
 
 
 def _pallas(interpret: bool, transposed: bool):
-    def fn(x, w, strides, paddings, blocks=None):
+    def fn(x, w, strides, paddings, blocks=None, epilogue=None, bias=None):
         from repro.kernels.ops import ganax_conv, ganax_conv_transpose
         op = ganax_conv_transpose if transposed else ganax_conv
         return op(x, w, strides, paddings, interpret=interpret,
-                  blocks=blocks)
+                  blocks=blocks, epilogue=epilogue, bias=bias)
     return fn
 
 
@@ -342,7 +465,19 @@ class DataflowPolicy:
     def from_legacy(cls, dataflow: str = "ganax",
                     use_pallas: bool = False) -> "DataflowPolicy":
         """Interpret the historic ``GanConfig`` flag pair.  This is the
-        only place the legacy booleans are given meaning."""
+        only place the legacy booleans are given meaning.
+
+        Deprecated: ``GanConfig(backend=...)`` (any registered backend
+        name, ``"pallas"``, or ``"auto"``) is the supported knob; the
+        legacy pair survives only for old configs and warns when set to
+        a non-default value."""
+        if dataflow != "ganax" or use_pallas:
+            warnings.warn(
+                "the legacy GanConfig dataflow=/use_pallas= fields are "
+                "deprecated; select the execution path with "
+                "GanConfig(backend=...) (a registered backend name, "
+                "'pallas', or 'auto') instead",
+                DeprecationWarning, stacklevel=3)
         if dataflow == "zero_insert":
             return cls(backend="zero-insert")
         if dataflow != "ganax":
@@ -432,16 +567,21 @@ def _reject_higher_order(x, w) -> None:
 
 
 def _run(backend: str, transposed: bool, x, w, strides, paddings,
-         blocks=None):
+         blocks=None, epilogue: Epilogue | None = None, bias=None):
+    ep = epilogue or _IDENTITY_EPILOGUE
     b = _BACKENDS[backend]
     fn = b.tconv if transposed else b.conv
     if backend.startswith("pallas"):
         _reject_higher_order(x, w)
-        return fn(x, w, strides, paddings, blocks=blocks)
+        return fn(x, w, strides, paddings, blocks=blocks,
+                  epilogue=None if ep.is_identity else ep, bias=bias)
     if blocks is not None:
         raise ValueError(f"blocks={blocks!r} only applies to the Pallas "
                          f"kernel backends, not {backend!r}")
-    return fn(x, w, strides, paddings)
+    y = fn(x, w, strides, paddings)
+    # Pure-JAX backends: the same epilogue, applied after the op — XLA
+    # fuses it natively and keeps native autodiff through it.
+    return y if ep.is_identity else ep.apply(y, bias)
 
 
 @jax.custom_vjp
@@ -549,13 +689,13 @@ def _conv_fwd(backend, strides, paddings, blocks, x, w):
     return _run(backend, False, x, w, strides, paddings, blocks), (x, w)
 
 
-def _conv_bwd(backend, strides, paddings, blocks, res, g):
-    x, w = res
+def _conv_dx(backend, strides, paddings, x, w, g):
+    """Input-cotangent of ``y = conv(x, w)``: a transposed conv (the
+    multi-phase MIMD path) — but the *uncropped* one: conv with padding
+    p reads input positions [-p, s·(Q-1)+K-1-p], so the adjoint is tconv
+    with padding 0 shifted by p, cropped to [0, I) with zero cotangent
+    past the stride tail."""
     nd = x.ndim - 2
-    # dx is a transposed conv (the multi-phase MIMD path) — but the
-    # *uncropped* one: conv with padding p reads input positions
-    # [-p, s·(Q-1)+K-1-p], so the adjoint is tconv with padding 0 shifted
-    # by p, cropped to [0, I) with zero cotangent past the stride tail.
     dx_full = _run(backend, True, g, _swap_io(w), strides, (0,) * nd)
     slc = [slice(None)]
     pad = [(0, 0)]
@@ -566,8 +706,13 @@ def _conv_bwd(backend, strides, paddings, blocks, res, g):
         pad.append((0, max(0, i_d - avail)))
     slc.append(slice(None))
     pad.append((0, 0))
-    dx = jnp.pad(dx_full[tuple(slc)], pad)
-    dw = _conv_wgrad(x, g, w.shape[:nd], strides, paddings)
+    return jnp.pad(dx_full[tuple(slc)], pad)
+
+
+def _conv_bwd(backend, strides, paddings, blocks, res, g):
+    x, w = res
+    dx = _conv_dx(backend, strides, paddings, x, w, g)
+    dw = _conv_wgrad(x, g, w.shape[:x.ndim - 2], strides, paddings)
     return (_first_order_only(dx.astype(x.dtype)),
             _first_order_only(dw.astype(w.dtype)))
 
@@ -575,8 +720,80 @@ def _conv_bwd(backend, strides, paddings, blocks, res, g):
 _conv_diff.defvjp(_conv_fwd, _conv_bwd)
 
 
+# -- fused-epilogue variants -------------------------------------------------
+#
+# ``y = act(op(x, w) + b)`` on a kernel backend.  The forward runs the
+# epilogue inside the Pallas flush; the backward recovers the activation
+# derivative from the saved *output* (see ``Epilogue.grad_from_output``),
+# folds it into the cotangent once, and then reuses the identity-epilogue
+# machinery: dx re-enters the unified kernel through the adjoint duality,
+# dw is the dense tap-indexed contraction, and db is a plain reduction of
+# the pre-activation cotangent over every non-channel axis.
+
+def _epilogue_cotangent(epilogue: Epilogue, y, g):
+    return g if epilogue.activation == "none" \
+        else g * epilogue.grad_from_output(y)
+
+
+def _bias_grad(g_pre, bias):
+    axes = tuple(range(g_pre.ndim - 1))
+    return jnp.sum(g_pre, axis=axes).astype(bias.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _tconv_ep_diff(backend, strides, paddings, blocks, epilogue, x, w, b):
+    return _run(backend, True, x, w, strides, paddings, blocks,
+                epilogue, b)
+
+
+def _tconv_ep_fwd(backend, strides, paddings, blocks, epilogue, x, w, b):
+    y = _run(backend, True, x, w, strides, paddings, blocks, epilogue, b)
+    return y, (x, w, b, y)
+
+
+def _tconv_ep_bwd(backend, strides, paddings, blocks, epilogue, res, g):
+    x, w, b, y = res
+    g_pre = _epilogue_cotangent(epilogue, y, g)
+    dx = _run(backend, False, g_pre, _swap_io(w), strides, paddings)
+    dw = _tconv_wgrad(x, g_pre, w.shape[:x.ndim - 2], strides, paddings)
+    db = None if b is None else _first_order_only(_bias_grad(g_pre, b))
+    return (_first_order_only(dx.astype(x.dtype)),
+            _first_order_only(dw.astype(w.dtype)), db)
+
+
+_tconv_ep_diff.defvjp(_tconv_ep_fwd, _tconv_ep_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _conv_ep_diff(backend, strides, paddings, blocks, epilogue, x, w, b):
+    return _run(backend, False, x, w, strides, paddings, blocks,
+                epilogue, b)
+
+
+def _conv_ep_fwd(backend, strides, paddings, blocks, epilogue, x, w, b):
+    y = _run(backend, False, x, w, strides, paddings, blocks, epilogue, b)
+    return y, (x, w, b, y)
+
+
+def _conv_ep_bwd(backend, strides, paddings, blocks, epilogue, res, g):
+    x, w, b, y = res
+    # the shared _conv_bwd derivation, with the pre-activation cotangent
+    # in place of g
+    g_pre = _epilogue_cotangent(epilogue, y, g)
+    dx = _conv_dx(backend, strides, paddings, x, w, g_pre)
+    dw = _conv_wgrad(x, g_pre, w.shape[:x.ndim - 2], strides, paddings)
+    db = None if b is None else _first_order_only(_bias_grad(g_pre, b))
+    return (_first_order_only(dx.astype(x.dtype)),
+            _first_order_only(dw.astype(w.dtype)), db)
+
+
+_conv_ep_diff.defvjp(_conv_ep_fwd, _conv_ep_bwd)
+
+
 def _planned_dispatch(policy: DataflowPolicy, transposed: bool, x, w,
-                      strides, paddings) -> tuple[str, tuple | None]:
+                      strides, paddings,
+                      epilogue: Epilogue | None = None
+                      ) -> tuple[str, tuple | None]:
     """Resolve (backend, blocks) for one dispatch.
 
     ``backend="auto"`` consults the autotuning planner with the full
@@ -592,7 +809,7 @@ def _planned_dispatch(policy: DataflowPolicy, transposed: bool, x, w,
     from repro.tune import get_planner, plan_key_for_op
     planner = get_planner()
     key = plan_key_for_op("tconv" if transposed else "conv", x, w,
-                          strides, paddings)
+                          strides, paddings, epilogue=epilogue)
     plan = planner.lookup(key)
     if plan is not None and plan.backend in _BACKENDS and \
             _BACKENDS[plan.backend].supports(nd):
@@ -628,7 +845,9 @@ def _blocks_valid(is_conv: bool, x, w, strides, paddings, blocks) -> bool:
 def tconv(x: jax.Array, w: jax.Array, strides: Sequence[int],
           paddings: Sequence[int],
           policy: DataflowPolicy | None = None,
-          blocks: Sequence[int] | None = None) -> jax.Array:
+          blocks: Sequence[int] | None = None,
+          bias: jax.Array | None = None,
+          epilogue: Epilogue | None = None) -> jax.Array:
     """Transposed convolution through the unified GANAX dispatch.
 
     x: (N, *spatial, Cin) channels-last; w: (K..., Cin, Cout).
@@ -637,35 +856,49 @@ def tconv(x: jax.Array, w: jax.Array, strides: Sequence[int],
     (block_qz, block_qy, block_cin, block_cout) quadruple for volumetric
     ones — the per-call escape hatch the autotuner measures through;
     with ``backend="auto"`` the planner's tuned blocks are used instead.
+
+    ``epilogue`` fuses a bias add (``bias``: a (Cout,) vector, required
+    iff ``epilogue.bias``) and activation into the op — inside the
+    Pallas accumulator flush on the kernel backends, applied post-op on
+    the pure-JAX ones; a bare ``bias=`` with no epilogue means a plain
+    fused bias add.  Fused configs stay differentiable (the fused
+    custom VJP differentiates through the epilogue).
     """
-    policy = policy or DataflowPolicy()
-    strides, paddings = tuple(strides), tuple(paddings)
-    if blocks is not None:
-        backend = policy.resolve(x.ndim - 2)
-    else:
-        backend, blocks = _planned_dispatch(policy, True, x, w, strides,
-                                            paddings)
-    blocks = tuple(blocks) if blocks is not None else None
-    if policy.differentiable and backend.startswith("pallas"):
-        return _tconv_diff(backend, strides, paddings, blocks, x, w)
-    return _run(backend, True, x, w, strides, paddings, blocks)
+    return _dispatch(True, x, w, strides, paddings, policy, blocks,
+                     bias, epilogue)
 
 
 def conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
          paddings: Sequence[int],
          policy: DataflowPolicy | None = None,
-         blocks: Sequence[int] | None = None) -> jax.Array:
+         blocks: Sequence[int] | None = None,
+         bias: jax.Array | None = None,
+         epilogue: Epilogue | None = None) -> jax.Array:
     """Plain (strided) convolution through the same dispatch — the paper's
     SIMD mode; on kernel backends it is the degenerate single-phase case
-    of the very same Pallas kernel."""
+    of the very same Pallas kernel.  ``bias``/``epilogue`` as in
+    :func:`tconv`."""
+    return _dispatch(False, x, w, strides, paddings, policy, blocks,
+                     bias, epilogue)
+
+
+def _dispatch(transposed: bool, x, w, strides, paddings, policy, blocks,
+              bias, epilogue) -> jax.Array:
     policy = policy or DataflowPolicy()
     strides, paddings = tuple(strides), tuple(paddings)
+    epilogue = _canonical_epilogue(epilogue, bias, w)
     if blocks is not None:
         backend = policy.resolve(x.ndim - 2)
     else:
-        backend, blocks = _planned_dispatch(policy, False, x, w, strides,
-                                            paddings)
+        backend, blocks = _planned_dispatch(policy, transposed, x, w,
+                                            strides, paddings, epilogue)
     blocks = tuple(blocks) if blocks is not None else None
     if policy.differentiable and backend.startswith("pallas"):
-        return _conv_diff(backend, strides, paddings, blocks, x, w)
-    return _run(backend, False, x, w, strides, paddings, blocks)
+        if epilogue.is_identity:
+            op = _tconv_diff if transposed else _conv_diff
+            return op(backend, strides, paddings, blocks, x, w)
+        op = _tconv_ep_diff if transposed else _conv_ep_diff
+        return op(backend, strides, paddings, blocks, epilogue, x, w,
+                  bias)
+    return _run(backend, transposed, x, w, strides, paddings, blocks,
+                epilogue, bias)

@@ -26,8 +26,20 @@ Layout contract (prepared by ``ops.py`` from the `PhaseSchedule`):
   w_taps  (P, T, Cin, Cout)  per-phase gathered taps, zero-padded to T
   n_taps  (P,)               consequential taps per phase
   tap_dy / tap_dx (P, T)     input row/col offset per tap (≥ 0, into x_pad)
+  bias    (1, Cout)          optional fused-epilogue bias (f32)
   out     (B, P, Qy, Qx, Cout) phase-major output planes (interleaved into
                               the final output by ops.py — a pure layout op)
+
+**Fused epilogue**: when a bias vector and/or an ``activation`` name is
+passed, the bias add and activation execute inside the accumulator
+*flush* step (the last Cin tile of each output block), on the f32
+accumulator, before the single cast+store to HBM.  Without fusion every
+layer writes the raw accumulator to HBM only to re-read it for two
+trivially fusable elementwise ops — one whole output-feature-map HBM
+round-trip per GAN layer on the hot path.  The activation is a static
+kernel parameter (each variant is its own compiled kernel), the bias
+rides the existing DMA pipeline as one extra (1, block_cout) VMEM
+block keyed on the Cout grid coordinate.
 
 Tiling: grid = (B, P, Qy/bq, Cout/bc, Cin/bk); the full (padded) spatial
 extent of one image is resident in VMEM per step (GAN feature maps are
@@ -63,17 +75,41 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 
 __all__ = ["ganax_conv_kernel", "ganax_conv_pallas",
-           "ganax_conv3d_kernel", "ganax_conv3d_pallas"]
+           "ganax_conv3d_kernel", "ganax_conv3d_pallas",
+           "apply_epilogue_to_acc"]
+
+
+def apply_epilogue_to_acc(acc, b_ref, activation: str,
+                          leaky_slope: float):
+    """Fused epilogue on the f32 accumulator: optional (1, block_cout)
+    bias block broadcast over the flattened spatial rows, then a
+    statically selected activation.  Shared by the planar and the
+    volumetric kernel's flush steps."""
+    if b_ref is not None:
+        acc = acc + b_ref[...]                 # (rows, bco) + (1, bco)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "leaky_relu":
+        acc = jnp.where(acc > 0, acc, leaky_slope * acc)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    return acc
 
 
 def ganax_conv_kernel(
     # scalar-prefetch refs (SMEM)
     n_taps_ref, tap_dy_ref, tap_dx_ref,
-    # tensor refs (VMEM blocks)
-    x_ref, w_ref, out_ref, acc_ref,
-    *, bqy: int, qx: int, sy: int, sx: int, n_cin_tiles: int,
+    # tensor refs (VMEM blocks): x, w, optional epilogue bias, then the
+    # output block and the f32 accumulator scratch
+    x_ref, w_ref, *refs,
+    bqy: int, qx: int, sy: int, sx: int, n_cin_tiles: int,
+    activation: str = "none", leaky_slope: float = 0.2,
 ):
     """One grid step: (batch b, phase p, qy tile, cout tile, cin tile)."""
+    if len(refs) == 3:
+        b_ref, out_ref, acc_ref = refs
+    else:
+        (out_ref, acc_ref), b_ref = refs, None
     ph = pl.program_id(1)
     qb = pl.program_id(2)
     ci = pl.program_id(4)
@@ -106,7 +142,9 @@ def ganax_conv_kernel(
 
     @pl.when(ci == n_cin_tiles - 1)
     def _flush():
-        out_ref[0, 0] = acc_ref[...].reshape(bqy, qx, -1).astype(out_ref.dtype)
+        acc = apply_epilogue_to_acc(acc_ref[...], b_ref, activation,
+                                    leaky_slope)
+        out_ref[0, 0] = acc.reshape(bqy, qx, -1).astype(out_ref.dtype)
 
 
 def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
@@ -115,8 +153,12 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
                       qy: int, qx: int,
                       block_cin: int = 128, block_cout: int = 128,
                       block_qy: int | None = None,
+                      bias: jax.Array | None = None,
+                      activation: str = "none", leaky_slope: float = 0.2,
                       out_dtype=None, interpret: bool = False) -> jax.Array:
-    """Invoke the unified kernel.  See module docstring for layout."""
+    """Invoke the unified kernel.  See module docstring for layout;
+    ``bias`` is the fused-epilogue (1, Cout) vector (or None) and
+    ``activation``/``leaky_slope`` the fused activation."""
     b, hp, wp, cin = x_pad.shape
     p, t, cin_w, cout = w_taps.shape
     block_qy = qy if block_qy is None else block_qy
@@ -132,16 +174,25 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
 
     grid = (b, p, n_qb, n_co, n_ci)
     kernel = functools.partial(ganax_conv_kernel, bqy=block_qy, qx=qx,
-                               sy=sy, sx=sx, n_cin_tiles=n_ci)
+                               sy=sy, sx=sx, n_cin_tiles=n_ci,
+                               activation=activation,
+                               leaky_slope=leaky_slope)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, block_cin),
+                     lambda bi, ph, qb, co, ci, *_: (bi, 0, 0, ci)),
+        pl.BlockSpec((1, t, block_cin, block_cout),
+                     lambda bi, ph, qb, co, ci, *_: (ph, 0, ci, co)),
+    ]
+    operands = [x_pad, w_taps]
+    if bias is not None:
+        assert bias.shape == (1, cout), (bias.shape, cout)
+        in_specs.append(pl.BlockSpec(
+            (1, block_cout), lambda bi, ph, qb, co, ci, *_: (0, co)))
+        operands.append(bias)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, block_cin),
-                         lambda bi, ph, qb, co, ci, *_: (bi, 0, 0, ci)),
-            pl.BlockSpec((1, t, block_cin, block_cout),
-                         lambda bi, ph, qb, co, ci, *_: (ph, 0, ci, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, block_qy, qx, block_cout),
             lambda bi, ph, qb, co, ci, *_: (bi, ph, qb, 0, co)),
@@ -158,18 +209,23 @@ def ganax_conv_pallas(x_pad: jax.Array, w_taps: jax.Array,
                                  "arbitrary", "arbitrary"),
         ),
     )
-    return fn(n_taps, tap_dy, tap_dx, x_pad, w_taps)
+    return fn(n_taps, tap_dy, tap_dx, *operands)
 
 
 def ganax_conv3d_kernel(
     # scalar-prefetch refs (SMEM)
     n_taps_ref, tap_dz_ref, tap_dy_ref, tap_dx_ref,
-    # tensor refs (VMEM blocks)
-    x_ref, w_ref, out_ref, acc_ref,
-    *, bqz: int, bqy: int, qx: int, sz: int, sy: int, sx: int,
-    n_cin_tiles: int,
+    # tensor refs (VMEM blocks): x, w, optional epilogue bias, then the
+    # output block and the f32 accumulator scratch
+    x_ref, w_ref, *refs,
+    bqz: int, bqy: int, qx: int, sz: int, sy: int, sx: int,
+    n_cin_tiles: int, activation: str = "none", leaky_slope: float = 0.2,
 ):
     """One grid step: (batch b, phase p, qz tile, qy tile, cout, cin)."""
+    if len(refs) == 3:
+        b_ref, out_ref, acc_ref = refs
+    else:
+        (out_ref, acc_ref), b_ref = refs, None
     ph = pl.program_id(1)
     zb = pl.program_id(2)
     qb = pl.program_id(3)
@@ -205,7 +261,9 @@ def ganax_conv3d_kernel(
 
     @pl.when(ci == n_cin_tiles - 1)
     def _flush():
-        out_ref[0, 0] = acc_ref[...].reshape(bqz, bqy, qx, -1) \
+        acc = apply_epilogue_to_acc(acc_ref[...], b_ref, activation,
+                                    leaky_slope)
+        out_ref[0, 0] = acc.reshape(bqz, bqy, qx, -1) \
             .astype(out_ref.dtype)
 
 
@@ -217,9 +275,14 @@ def ganax_conv3d_pallas(x_pad: jax.Array, w_taps: jax.Array,
                         block_cin: int = 128, block_cout: int = 128,
                         block_qz: int | None = None,
                         block_qy: int | None = None,
+                        bias: jax.Array | None = None,
+                        activation: str = "none",
+                        leaky_slope: float = 0.2,
                         out_dtype=None, interpret: bool = False
                         ) -> jax.Array:
-    """Invoke the volumetric kernel.  See module docstring for layout."""
+    """Invoke the volumetric kernel.  See module docstring for layout;
+    the fused epilogue (``bias``/``activation``/``leaky_slope``) is
+    identical to the planar kernel's."""
     b, dp, hp, wp, cin = x_pad.shape
     p, t, cin_w, cout = w_taps.shape
     block_qz = qz if block_qz is None else block_qz
@@ -239,18 +302,27 @@ def ganax_conv3d_pallas(x_pad: jax.Array, w_taps: jax.Array,
     grid = (b, p, n_zb, n_qb, n_co, n_ci)
     kernel = functools.partial(ganax_conv3d_kernel, bqz=block_qz,
                                bqy=block_qy, qx=qx, sz=sz, sy=sy, sx=sx,
-                               n_cin_tiles=n_ci)
+                               n_cin_tiles=n_ci, activation=activation,
+                               leaky_slope=leaky_slope)
+    in_specs = [
+        pl.BlockSpec((1, dp, hp, wp, block_cin),
+                     lambda bi, ph, zb, qb, co, ci, *_:
+                     (bi, 0, 0, 0, ci)),
+        pl.BlockSpec((1, t, block_cin, block_cout),
+                     lambda bi, ph, zb, qb, co, ci, *_:
+                     (ph, 0, ci, co)),
+    ]
+    operands = [x_pad, w_taps]
+    if bias is not None:
+        assert bias.shape == (1, cout), (bias.shape, cout)
+        in_specs.append(pl.BlockSpec(
+            (1, block_cout),
+            lambda bi, ph, zb, qb, co, ci, *_: (0, co)))
+        operands.append(bias)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, dp, hp, wp, block_cin),
-                         lambda bi, ph, zb, qb, co, ci, *_:
-                         (bi, 0, 0, 0, ci)),
-            pl.BlockSpec((1, t, block_cin, block_cout),
-                         lambda bi, ph, zb, qb, co, ci, *_:
-                         (ph, 0, ci, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, block_qz, block_qy, qx, block_cout),
             lambda bi, ph, zb, qb, co, ci, *_: (bi, ph, zb, qb, 0, co)),
@@ -267,4 +339,4 @@ def ganax_conv3d_pallas(x_pad: jax.Array, w_taps: jax.Array,
                                  "arbitrary", "arbitrary", "arbitrary"),
         ),
     )
-    return fn(n_taps, tap_dz, tap_dy, tap_dx, x_pad, w_taps)
+    return fn(n_taps, tap_dz, tap_dy, tap_dx, *operands)

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dataflow import (CompiledUops, compile_conv_uops,
+from repro.core.dataflow import (CompiledUops, Epilogue, compile_conv_uops,
                                  compile_uops)
 from repro.core.dataflow import pallas_kernel_supported as kernel_supported
 from repro.core.tconv import interleave_phases
@@ -112,29 +112,56 @@ def _check_rank(nd: int, route: str) -> None:
                          f"dataflow.{route} for automatic fallback")
 
 
+def _epilogue_args(epilogue: Epilogue | None, bias, cout: int) -> dict:
+    """Kernel kwargs for one fused epilogue (validated against it).
+    As in the dataflow layer, a bare ``bias=`` with no epilogue means a
+    plain fused bias add."""
+    if epilogue is None:
+        epilogue = Epilogue(bias=bias is not None)
+    if epilogue.bias != (bias is not None):
+        raise ValueError(f"epilogue.bias={epilogue.bias} but "
+                         f"bias {'missing' if bias is None else 'passed'}")
+    b2d = None
+    if bias is not None:
+        bias = jnp.asarray(bias)
+        if bias.shape != (cout,):
+            raise ValueError(f"bias must have shape (cout,)=({cout},), "
+                             f"got {tuple(bias.shape)}")
+        # the kernel adds on the f32 accumulator; (1, Cout) so the VMEM
+        # block keyed on the Cout grid coordinate stays rank-2
+        b2d = bias.astype(jnp.float32)[None, :]
+    return {"bias": b2d, "activation": epilogue.activation,
+            "leaky_slope": epilogue.leaky_slope}
+
+
 def _kernel_call(x_pad, w_taps, u, *, out_strides, q_sizes, blocks,
-                 out_dtype, interpret):
+                 out_dtype, interpret, epilogue=None, bias=None):
     """Dispatch one prepared invocation to the rank-matching kernel."""
+    ep_args = _epilogue_args(epilogue, bias, int(w_taps.shape[-1]))
     if len(q_sizes) == 2:
         bqy, bci, bco = blocks
         return ganax_conv_pallas(
             x_pad, w_taps, jnp.asarray(u.n_taps), jnp.asarray(u.tap_dy),
             jnp.asarray(u.tap_dx), out_strides=out_strides,
             qy=q_sizes[0], qx=q_sizes[1], block_cin=bci, block_cout=bco,
-            block_qy=bqy, out_dtype=out_dtype, interpret=interpret)
+            block_qy=bqy, out_dtype=out_dtype, interpret=interpret,
+            **ep_args)
     bqz, bqy, bci, bco = blocks
     return ganax_conv3d_pallas(
         x_pad, w_taps, jnp.asarray(u.n_taps), jnp.asarray(u.tap_dz),
         jnp.asarray(u.tap_dy), jnp.asarray(u.tap_dx),
         out_strides=out_strides, qz=q_sizes[0], qy=q_sizes[1],
         qx=q_sizes[2], block_cin=bci, block_cout=bco, block_qz=bqz,
-        block_qy=bqy, out_dtype=out_dtype, interpret=interpret)
+        block_qy=bqy, out_dtype=out_dtype, interpret=interpret,
+        **ep_args)
 
 
 def ganax_conv_transpose(x: jax.Array, w: jax.Array,
                          strides: Sequence[int], paddings: Sequence[int],
                          *, interpret: bool | None = None,
-                         blocks: Sequence[int] | None = None) -> jax.Array:
+                         blocks: Sequence[int] | None = None,
+                         epilogue: Epilogue | None = None,
+                         bias: jax.Array | None = None) -> jax.Array:
     """Transposed convolution through the unified GANAX kernel.
 
     x: (N, *spatial, Cin) channels-last; w: (K..., Cin, Cout), with two
@@ -142,6 +169,13 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
     shapes — (block_qy, block_cin, block_cout) for 2-D,
     (block_qz, block_qy, block_cin, block_cout) for 3-D; each must
     divide its extent.  ``None`` uses the heuristic defaults.
+
+    ``epilogue``/``bias`` fuse a bias add + activation into the kernel's
+    accumulator flush (phases whose μop list is empty — kernel < stride
+    — still get the epilogue: their outputs are legitimately
+    ``act(0 + b)``).  The epilogue commutes with the phase interleave
+    (it is elementwise), so it runs on the phase-major planes before the
+    pure-layout reorganization.
     """
     nd = x.ndim - 2
     _check_rank(nd, "tconv")
@@ -159,7 +193,8 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
 
     out_pm = _kernel_call(x_pad, w_taps, u, out_strides=(1,) * nd,
                           q_sizes=u.q_sizes, blocks=blocks,
-                          out_dtype=x.dtype, interpret=interpret)
+                          out_dtype=x.dtype, interpret=interpret,
+                          epilogue=epilogue, bias=bias)
     # out_pm: (B, P, *Q, Cout) in schedule.phase_order; interleave.
     phase_planes = {}
     for row, flat in enumerate(sched.phase_order):
@@ -174,9 +209,12 @@ def ganax_conv_transpose(x: jax.Array, w: jax.Array,
 def ganax_conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
                paddings: Sequence[int], *,
                interpret: bool | None = None,
-               blocks: Sequence[int] | None = None) -> jax.Array:
+               blocks: Sequence[int] | None = None,
+               epilogue: Epilogue | None = None,
+               bias: jax.Array | None = None) -> jax.Array:
     """Plain (strided) convolution through the same kernel — the paper's
-    SIMD mode: a single phase whose taps are the full kernel."""
+    SIMD mode: a single phase whose taps are the full kernel.
+    ``epilogue``/``bias`` as in :func:`ganax_conv_transpose`."""
     nd = x.ndim - 2
     _check_rank(nd, "conv")
     if interpret is None:
@@ -192,5 +230,6 @@ def ganax_conv(x: jax.Array, w: jax.Array, strides: Sequence[int],
     blocks = resolve_blocks(blocks, u.out_sizes[:-1], cin, cout)
     out_pm = _kernel_call(x_pad, w_taps, u, out_strides=strides,
                           q_sizes=u.out_sizes, blocks=blocks,
-                          out_dtype=x.dtype, interpret=interpret)
+                          out_dtype=x.dtype, interpret=interpret,
+                          epilogue=epilogue, bias=bias)
     return out_pm[:, 0]

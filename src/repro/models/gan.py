@@ -9,9 +9,20 @@ baseline — is selected by a single :class:`~repro.core.dataflow
 .DataflowPolicy`: set ``GanConfig.backend`` explicitly, or leave it
 ``None`` and the legacy ``dataflow``/``use_pallas`` fields are interpreted
 by ``DataflowPolicy.from_legacy`` (their meaning lives in
-``core/dataflow.py``, not here).  All paths are differentiable — the
-dispatch layer's custom VJP re-enters the unified kernel for the backward
-pass — so ``use_pallas=True`` configs train end-to-end.
+``core/dataflow.py``, not here; they are deprecated — ``backend=`` is
+the supported knob).  All paths are differentiable — the dispatch
+layer's custom VJP re-enters the unified kernel for the backward pass —
+so Pallas-backed configs train end-to-end.
+
+Bias and activation are **fused epilogues**: every conv layer passes an
+:class:`~repro.core.dataflow.Epilogue` (and its bias vector) into the
+unified op instead of applying ``+ b`` / relu / tanh / leaky-relu as
+separate post-ops, so the kernel backends never round-trip the raw
+accumulator through HBM between a layer and its activation.
+:func:`generator_epilogues` / :func:`discriminator_epilogues` are the
+single source of truth for the per-layer specs — the autotuner's plan
+keys (``repro.tune.zoo``) are built from the same helpers, so
+``backend="auto"`` tunes exactly the fused op the model dispatches.
 
 These power the GAN training examples, the serving engine
 (`serve.gan`), and the wall-clock microbenchmarks (GANAX dataflow vs
@@ -28,14 +39,19 @@ import jax.numpy as jnp
 
 from repro.configs.gans import GAN_MODELS
 from repro.core.analytical import ConvLayer
-from repro.core.dataflow import DataflowPolicy
+from repro.core.dataflow import DataflowPolicy, Epilogue
 from repro.core.dataflow import conv as df_conv
 from repro.core.dataflow import tconv as df_tconv
 from repro.models.common import PSpec, init_params
 
 __all__ = ["GanConfig", "generator_specs", "discriminator_specs",
            "init_gan", "generator_apply", "discriminator_apply",
+           "generator_epilogues", "discriminator_epilogues",
            "gan_losses"]
+
+# The discriminator's LeakyReLU slope (DCGAN convention, used by every
+# Table-I discriminator).
+LEAKY_SLOPE = 0.2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,40 +123,64 @@ def init_gan(cfg: GanConfig, key: jax.Array):
             init_params(kd, discriminator_specs(cfg)))
 
 
+def generator_epilogues(g_layers: Sequence[ConvLayer]) -> list[Epilogue]:
+    """Per-layer fused epilogues of a Table-I generator: bias + ReLU on
+    every hidden layer, bias + tanh on the image-producing last one."""
+    last = len(g_layers) - 1
+    return [Epilogue(bias=True,
+                     activation="tanh" if i == last else "relu")
+            for i in range(len(g_layers))]
+
+
+def discriminator_epilogues(d_layers: Sequence[ConvLayer]
+                            ) -> list[Epilogue]:
+    """Per-layer fused epilogues of a Table-I discriminator: bias +
+    LeakyReLU on every hidden layer, bias only on the logits layer."""
+    last = len(d_layers) - 1
+    return [Epilogue(bias=True,
+                     activation="none" if i == last else "leaky_relu",
+                     leaky_slope=LEAKY_SLOPE)
+            for i in range(len(d_layers))]
+
+
 def generator_apply(params, z, cfg: GanConfig,
                     policy: DataflowPolicy | None = None):
-    """z (B, z_dim) → image (B, *spatial, C)."""
+    """z (B, z_dim) → image (B, *spatial, C).
+
+    Every conv layer's bias+activation runs as a fused epilogue inside
+    the unified op — no out-of-kernel ``+ b`` / activation on the conv
+    path (only the z-projection MLP keeps its own bias/ReLU)."""
     g_layers, _ = cfg.layers
     first = g_layers[0]
     policy = policy or cfg.policy
     x = z @ params["proj_w"] + params["proj_b"]
     x = x.reshape((z.shape[0],) + tuple(first.in_spatial) + (first.cin,))
     x = jax.nn.relu(x)
-    for i, l in enumerate(g_layers):
+    for i, (l, ep) in enumerate(zip(g_layers,
+                                    generator_epilogues(g_layers))):
         w = params[f"t{i}_w"]
         b = params[f"t{i}_b"]
-        if l.transposed:
-            x = df_tconv(x, w, l.strides, l.paddings, policy=policy)
-        else:  # encoder stage inside an encoder-decoder generator
-            x = df_conv(x, w, l.strides, l.paddings, policy=policy)
-        x = x + b
-        x = jnp.tanh(x) if i == len(g_layers) - 1 else jax.nn.relu(x)
+        # encoder stages inside an encoder-decoder generator are plain
+        # convs; both ops take the same fused epilogue
+        op = df_tconv if l.transposed else df_conv
+        x = op(x, w, l.strides, l.paddings, policy=policy,
+               bias=b, epilogue=ep)
     return x
 
 
 def discriminator_apply(params, img, cfg: GanConfig,
                         policy: DataflowPolicy | None = None):
-    """img (B, *spatial, C) → logits (B,)."""
+    """img (B, *spatial, C) → logits (B,).  Bias + LeakyReLU run as
+    fused epilogues inside the unified conv op."""
     _, d_layers = cfg.layers
     x = img
     policy = policy or cfg.policy
-    for i, l in enumerate(d_layers):
+    for i, (l, ep) in enumerate(zip(d_layers,
+                                    discriminator_epilogues(d_layers))):
         w = params[f"c{i}_w"]
         b = params[f"c{i}_b"]
-        x = df_conv(x, w, l.strides, l.paddings, policy=policy)
-        x = x + b
-        if i < len(d_layers) - 1:
-            x = jax.nn.leaky_relu(x, 0.2)
+        x = df_conv(x, w, l.strides, l.paddings, policy=policy,
+                    bias=b, epilogue=ep)
     return x.reshape(img.shape[0], -1).mean(axis=-1)
 
 

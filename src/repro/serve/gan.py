@@ -15,10 +15,12 @@ The execution path is the server's :class:`~repro.core.dataflow
 .DataflowPolicy` (default: the config's own policy; pass
 ``DataflowPolicy()`` explicitly for platform auto-selection).  With
 ``backend="auto"`` the server **warms the autotuning planner on
-construction**: every generator-layer geometry gets a measured plan
-before the first jit trace, so the traced executable runs the tuned
-backends/block shapes (zero measurements when the planner's plan file is
-already warm).  The resolved per-layer plans are exposed in ``repr``.
+construction**: every generator-layer geometry — keyed on the fused
+bias+activation epilogue the model actually dispatches — gets a
+measured plan before the first jit trace, so the traced executable runs
+the tuned backends/block shapes (zero measurements when the planner's
+plan file is already warm).  The resolved per-layer plans are exposed
+in ``repr``.
 """
 
 from __future__ import annotations

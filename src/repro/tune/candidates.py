@@ -1,6 +1,12 @@
 """Candidate enumeration: (backend × Pallas block shape) configurations
 valid for one layer geometry.
 
+The fused epilogue rides in the :class:`~repro.tune.planner.PlanKey`
+(``bias``/``activation``/``leaky_slope``), not in the candidates: every
+candidate of an epilogue-carrying key is measured running the fused op
+(see ``measure._candidate_fn``), and the VMEM budget accounts for the
+kernel's extra bias block.
+
 The enumerator is pure geometry — it reuses the cached μop compilation
 (`core.dataflow.compile_uops` / `compile_conv_uops`) to learn the
 phase-plane extents and padding plan, then emits:
@@ -105,7 +111,8 @@ def _vmem_bytes(key: PlanKey, q_sizes: tuple[int, ...], taps: int,
     w_blk = taps * bci * bco * itemsize
     out_blk = rows * bco * itemsize
     acc = rows * bco * 4  # f32 accumulator scratch
-    return x_blk + w_blk + out_blk + acc
+    bias = bco * 4 if key.bias else 0  # fused-epilogue (1, bco) f32 block
+    return x_blk + w_blk + out_blk + acc + bias
 
 
 def _pallas_candidates(key: PlanKey, backend: str) -> list[Candidate]:

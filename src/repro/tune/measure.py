@@ -29,7 +29,7 @@ from repro.core.dataflow import tconv as df_tconv
 from repro.tune.candidates import Candidate
 from repro.tune.planner import PlanKey
 
-__all__ = ["synthesize_inputs", "measure_candidate",
+__all__ = ["synthesize_inputs", "synthesize_bias", "measure_candidate",
            "measure_candidates_interleaved", "time_fn",
            "time_interleaved"]
 
@@ -43,6 +43,15 @@ def synthesize_inputs(key: PlanKey) -> tuple[jax.Array, jax.Array]:
     w = jnp.asarray(rng.normal(
         size=(*key.kernel, key.cin, key.cout)), dtype)
     return x, w
+
+
+def synthesize_bias(key: PlanKey) -> jax.Array | None:
+    """Deterministic random bias for keys whose epilogue carries one
+    (None otherwise) — timing must exercise the fused bias path."""
+    if not key.bias:
+        return None
+    rng = np.random.default_rng(zlib.crc32(key.describe().encode()) + 1)
+    return jnp.asarray(rng.normal(size=(key.cout,)), jnp.dtype(key.dtype))
 
 
 def time_fn(fn, *args, warmup: int = 1, repeats: int = 5) -> float:
@@ -85,14 +94,19 @@ def _candidate_fn(key: PlanKey, cand: Candidate):
 
     Forward-only (``differentiable=False``): tuning targets the serving /
     inference hot path; training reuses the tuned forward and the
-    heuristic backward (see ``core.dataflow``)."""
+    heuristic backward (see ``core.dataflow``).  The key's epilogue is
+    part of the measured op — a fused bias+activation plan must be won
+    by timing the fused kernel, not the bare accumulator flush (the
+    bias values are a jit constant: timing depends on shapes only)."""
     op = df_tconv if key.kind == "tconv" else df_conv
     policy = DataflowPolicy(backend=cand.backend, differentiable=False)
+    epilogue = key.epilogue
+    bias = synthesize_bias(key)
 
     @jax.jit
     def run(x, w):
         return op(x, w, key.strides, key.paddings, policy=policy,
-                  blocks=cand.blocks)
+                  blocks=cand.blocks, bias=bias, epilogue=epilogue)
 
     return run
 

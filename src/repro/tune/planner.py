@@ -37,8 +37,8 @@ from typing import Iterable, Sequence
 
 import jax
 
-from repro.core.dataflow import (DataflowPolicy, available_backends,
-                                 backend_supports)
+from repro.core.dataflow import (DataflowPolicy, Epilogue,
+                                 available_backends, backend_supports)
 
 __all__ = ["PlanKey", "Plan", "Planner", "plan_key_for_op",
            "PLAN_FORMAT_VERSION"]
@@ -48,9 +48,20 @@ log = logging.getLogger(__name__)
 PLAN_FORMAT_VERSION = 1
 
 
+# PlanKey fields added by the fused-epilogue refactor: pre-epilogue plan
+# files simply omit them, and from_json fills the defaults (= an identity
+# epilogue), so old BENCH_tune.json / plan JSONs keep loading.
+_EPILOGUE_FIELDS = ("bias", "activation", "leaky_slope")
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
-    """One tunable workload: (layer geometry, dtype, platform)."""
+    """One tunable workload: (layer geometry, epilogue, dtype, platform).
+
+    The epilogue is part of the key because it is part of the op the
+    plan will execute: a fused bias+activation changes the kernel's
+    flush step (and the pure-JAX backends' fusion opportunities), so
+    ``backend="auto"`` must tune the op that actually runs."""
 
     kind: str                       # "tconv" | "conv"
     batch: int
@@ -62,17 +73,29 @@ class PlanKey:
     cout: int
     dtype: str = "float32"
     platform: str = "cpu"
+    # -- fused epilogue (defaults = identity, matching pre-epilogue keys)
+    bias: bool = False
+    activation: str = "none"
+    leaky_slope: float = 0.2
 
     @property
     def nd(self) -> int:
         return len(self.in_spatial)
 
+    @property
+    def epilogue(self) -> Epilogue:
+        return Epilogue(bias=self.bias, activation=self.activation,
+                        leaky_slope=self.leaky_slope)
+
     def describe(self) -> str:
         sp = "x".join(map(str, self.in_spatial))
         k = "x".join(map(str, self.kernel))
         s = "x".join(map(str, self.strides))
+        ep = self.epilogue
+        suffix = "" if ep.is_identity else f" ep[{ep.describe()}]"
         return (f"{self.kind} b{self.batch} {sp} k{k} s{s} "
-                f"{self.cin}->{self.cout} {self.dtype}@{self.platform}")
+                f"{self.cin}->{self.cout}{suffix} "
+                f"{self.dtype}@{self.platform}")
 
     def to_json(self) -> dict:
         return {f.name: getattr(self, f.name)
@@ -81,13 +104,18 @@ class PlanKey:
     @classmethod
     def from_json(cls, d: dict) -> "PlanKey":
         names = {f.name for f in dataclasses.fields(cls)}
-        if set(d) != names:
+        required = names - set(_EPILOGUE_FIELDS)
+        if not (required <= set(d) <= names):
             raise ValueError(f"bad plan key fields: {sorted(d)}")
         d = dict(d)
         for f in ("in_spatial", "kernel", "strides", "paddings"):
             d[f] = tuple(int(v) for v in d[f])
         for f in ("batch", "cin", "cout"):
             d[f] = int(d[f])
+        if "bias" in d:
+            d["bias"] = bool(d["bias"])
+        if "leaky_slope" in d:
+            d["leaky_slope"] = float(d["leaky_slope"])
         return cls(**d)
 
 
@@ -124,10 +152,13 @@ class Plan:
 
 
 def plan_key_for_op(kind: str, x, w, strides: Sequence[int],
-                    paddings: Sequence[int]) -> PlanKey:
+                    paddings: Sequence[int],
+                    epilogue: Epilogue | None = None) -> PlanKey:
     """Build the plan key for one unified-op dispatch (works on tracers:
-    only shapes/dtypes are read)."""
+    only shapes/dtypes are read).  ``epilogue`` folds the fused
+    bias/activation spec into the key (None = identity)."""
     nd = x.ndim - 2
+    ep = epilogue if epilogue is not None else Epilogue()
     return PlanKey(
         kind=kind,
         batch=int(x.shape[0]),
@@ -139,6 +170,7 @@ def plan_key_for_op(kind: str, x, w, strides: Sequence[int],
         cout=int(w.shape[-1]),
         dtype=str(jax.numpy.dtype(x.dtype)),
         platform=jax.default_backend(),
+        **ep.key_fields(),
     )
 
 

@@ -23,12 +23,20 @@ __all__ = ["layer_plan_keys", "warm_gan_plans", "tune_model_zoo"]
 
 
 def layer_plan_keys(layers, batch: int, dtype: str = "float32",
-                    platform: str | None = None
+                    platform: str | None = None, epilogues=None
                     ) -> list[tuple[str, PlanKey]]:
-    """(layer name, PlanKey) per ConvLayer-like entry in ``layers``."""
+    """(layer name, PlanKey) per ConvLayer-like entry in ``layers``.
+
+    ``epilogues`` (an optional per-layer :class:`Epilogue` sequence)
+    folds the fused bias/activation specs into the keys — warmed plans
+    are only found at dispatch when they key the op the model actually
+    runs, which since the fused-epilogue refactor includes the
+    epilogue."""
     platform = platform or jax.default_backend()
+    if epilogues is None:
+        epilogues = [None] * len(layers)
     out = []
-    for l in layers:
+    for l, ep in zip(layers, epilogues):
         out.append((l.name, PlanKey(
             kind="tconv" if l.transposed else "conv",
             batch=int(batch),
@@ -37,26 +45,40 @@ def layer_plan_keys(layers, batch: int, dtype: str = "float32",
             strides=tuple(l.strides),
             paddings=tuple(l.paddings),
             cin=int(l.cin), cout=int(l.cout),
-            dtype=dtype, platform=platform)))
+            dtype=dtype, platform=platform,
+            **({} if ep is None else ep.key_fields()))))
     return out
+
+
+def _gan_layer_groups(cfg, *, generator_only: bool = False):
+    """(prefix, layers, epilogues) per network of a ``GanConfig`` — the
+    epilogues come from the model's own helpers so tuner keys and model
+    dispatches agree."""
+    from repro.models.gan import (discriminator_epilogues,
+                                  generator_epilogues)
+    g_layers, d_layers = cfg.layers
+    groups = [("g", g_layers, generator_epilogues(g_layers))]
+    if not generator_only:
+        groups.append(("d", d_layers, discriminator_epilogues(d_layers)))
+    return groups
 
 
 def warm_gan_plans(cfg, batch: int, planner: Planner | None = None, *,
                    generator_only: bool = False, measure: bool = True,
                    dtype: str = "float32") -> dict[str, Plan]:
-    """Resolve a plan for every layer of ``cfg`` (a ``GanConfig``).
+    """Resolve a plan for every layer of ``cfg`` (a ``GanConfig``),
+    keyed on the fused per-layer epilogues the model dispatches.
 
     Returns ``{"g/<name>" | "d/<name>": Plan}``.  With a warm plan cache
     (or persisted plan file) this performs zero measurements."""
     if planner is None:
         from repro.tune import get_planner
         planner = get_planner()
-    g_layers, d_layers = cfg.layers
-    groups = [("g", g_layers)] + ([] if generator_only
-                                  else [("d", d_layers)])
     plans: dict[str, Plan] = {}
-    for prefix, layers in groups:
-        for name, key in layer_plan_keys(layers, batch, dtype=dtype):
+    for prefix, layers, eps in _gan_layer_groups(
+            cfg, generator_only=generator_only):
+        for name, key in layer_plan_keys(layers, batch, dtype=dtype,
+                                         epilogues=eps):
             plans[f"{prefix}/{name}"] = planner.plan(key, measure=measure)
     return plans
 
@@ -148,8 +170,6 @@ def tune_model_zoo(models: Sequence[str], planner: Planner, *,
 
 
 def _all_keys(cfg, batch):
-    g_layers, d_layers = cfg.layers
-    return ([(f"g/{n}", k)
-             for n, k in layer_plan_keys(g_layers, batch)] +
-            [(f"d/{n}", k)
-             for n, k in layer_plan_keys(d_layers, batch)])
+    return [(f"{prefix}/{n}", k)
+            for prefix, layers, eps in _gan_layer_groups(cfg)
+            for n, k in layer_plan_keys(layers, batch, epilogues=eps)]

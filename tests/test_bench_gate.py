@@ -13,7 +13,8 @@ from benchmarks import check_regression as cr  # noqa: E402
 
 DATAFLOW = {
     "dcgan": {"polyphase_us": 1000.0, "zero_insert_us": 2000.0,
-              "wallclock_speedup": 2.0},
+              "wallclock_speedup": 2.0, "fused_us": 900.0,
+              "unfused_us": 950.0, "fused_speedup": 1.05},
     "3dgan": {"polyphase_us": 9000.0, "zero_insert_us": 63000.0,
               "wallclock_speedup": 7.0},
 }
@@ -34,11 +35,26 @@ def test_extract_gated_metrics_only():
     fresh = cr.extract(DATAFLOW, TUNE)
     assert fresh["dataflow"]["3dgan"] == {"polyphase_us": 9000.0,
                                           "wallclock_speedup": 7.0}
+    # the fused path is gated via its wall-clock; the informational
+    # unfused_us / fused_speedup rows are not
+    assert fresh["dataflow"]["dcgan"] == {"polyphase_us": 1000.0,
+                                          "wallclock_speedup": 2.0,
+                                          "fused_us": 900.0}
     assert fresh["tune"] == {"dcgan": {"generator_tuned_us": 500.0}}
     assert "_meta" not in fresh["tune"]          # meta rows never gate
     # null / non-numeric metric values are dropped, not compared
     assert cr.extract({"m": {"polyphase_us": None}}, {}) == \
         {"dataflow": {}, "tune": {}}
+
+
+def test_fused_wallclock_regression_gated(tmp_path, capsys):
+    """A slowdown confined to the fused path fails the gate."""
+    base = cr.extract(DATAFLOW, TUNE)
+    fresh = json.loads(json.dumps(base))
+    fresh["dataflow"]["dcgan"]["fused_us"] = 1500.0     # +67%
+    failures, _ = cr.compare(base, fresh, threshold=0.25)
+    assert len(failures) == 1
+    assert "dcgan/fused_us" in failures[0]
 
 
 def test_compare_directions_and_threshold():

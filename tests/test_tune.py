@@ -139,6 +139,49 @@ def test_stale_entries_dropped(tmp_path):
     assert p.lookup(KEY).backend == "zero-insert"
 
 
+def test_pre_epilogue_plan_file_loads(tmp_path):
+    """Plan files written before the fused-epilogue refactor lack the
+    bias/activation/leaky_slope key fields: they must load (missing
+    epilogue == identity), not crash or be dropped as stale."""
+    old_key = KEY.to_json()
+    for f in ("bias", "activation", "leaky_slope"):
+        del old_key[f]
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({
+        "version": 1,
+        "plans": [{"key": old_key,
+                   "plan": {"backend": "zero-insert", "blocks": None}}]}))
+    p = Planner(path)
+    assert p.load_error is None and p.stale_dropped == 0
+    assert p.lookup(KEY).backend == "zero-insert"   # identity-epilogue key
+    # an epilogue-carrying key is a *different* workload: no false hit
+    import dataclasses
+    fused = dataclasses.replace(KEY, bias=True, activation="relu")
+    assert p.lookup(fused) is None
+    # unknown fields still make an entry stale (dropped, not fatal)
+    bad_key = dict(KEY.to_json(), systolic=True)
+    path.write_text(json.dumps({
+        "version": 1,
+        "plans": [{"key": bad_key,
+                   "plan": {"backend": "zero-insert", "blocks": None}}]}))
+    p2 = Planner(path)
+    assert p2.stale_dropped == 1 and len(p2) == 0
+
+
+def test_epilogue_key_round_trips(tmp_path):
+    """Epilogue-carrying plan keys survive the JSON plan file."""
+    import dataclasses
+    fused = dataclasses.replace(KEY, bias=True, activation="leaky_relu",
+                                leaky_slope=0.2)
+    assert PlanKey.from_json(fused.to_json()) == fused
+    path = tmp_path / "plans.json"
+    p1 = Planner(path)
+    p1.put(fused, Plan(backend="polyphase"))
+    p2 = Planner(path)
+    assert p2.lookup(fused).backend == "polyphase"
+    assert p2.lookup(KEY) is None
+
+
 def test_wrong_version_is_stale(tmp_path):
     path = tmp_path / "plans.json"
     path.write_text(json.dumps({"version": 999, "plans": []}))
