@@ -15,6 +15,10 @@ threshold (default 25%):
   its own baseline like the other wall-clock rows (the informational
   ``unfused_us`` / ``fused_speedup`` columns track the same-run
   fused-vs-unfused ratio but do not gate);
+* ``dataflow.<model>.program_us`` — the ahead-of-time compiled
+  ``repro.program`` generator executable (the supported entry point;
+  the informational ``generator_apply_us`` / ``program_speedup``
+  columns track the same-run legacy-vs-program ratio but do not gate);
 * ``tune.<model>.generator_tuned_us`` — the tuned end-to-end generator.
 
 Faster-than-baseline results always pass (speedups are the point); a
@@ -54,6 +58,7 @@ GATED_METRICS = (
     ("dataflow", "polyphase_us", "lower"),
     ("dataflow", "wallclock_speedup", "higher"),
     ("dataflow", "fused_us", "lower"),
+    ("dataflow", "program_us", "lower"),
     ("tune", "generator_tuned_us", "lower"),
 )
 DEFAULT_THRESHOLD = 0.25

@@ -146,6 +146,44 @@ def bench_fused_epilogue(models=("dcgan", "3dgan"), batch=2,
     return rows
 
 
+def bench_program(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
+                  repeats=5, backend="polyphase"):
+    """Ahead-of-time compiled Program vs the legacy per-call dispatch
+    threading over each model's full generator forward.
+
+    Emits ``micro/<model>/program_us`` (the Program API's jitted
+    executable — this row feeds the CI regression gate: the supported
+    entry point must not regress), ``generator_apply_us`` (the
+    legacy-wrapper path, now itself program-backed), and the
+    machine-relative ``program_speedup`` (legacy / program, both sides
+    from the same run)."""
+    from repro.models.gan import GanConfig, generator_apply, init_gan
+    from repro.program import Program
+
+    rows = []
+    print(f"\n== microbench: program vs legacy dispatch ({backend}, "
+          f"batch={batch}, channels×{channel_scale}) ==")
+    for name in models:
+        cfg = GanConfig(name=name, channel_scale=channel_scale,
+                        backend=backend)
+        g_params, _ = init_gan(cfg, jax.random.PRNGKey(0))
+        z = jnp.asarray(np.random.default_rng(0).normal(
+            size=(batch, cfg.z_dim)), jnp.float32)
+        prog = Program.build(cfg, batch, "generator")
+        legacy = jax.jit(lambda p, z, cfg=cfg: generator_apply(p, z, cfg))
+        t_prog = _time(prog.apply, g_params, z, iters=repeats)
+        t_leg = _time(legacy, g_params, z, iters=repeats)
+        speed = t_leg / t_prog if t_prog else float("nan")
+        rows.append((f"micro/{name}/program_us", t_prog * 1e6, ""))
+        rows.append((f"micro/{name}/generator_apply_us", t_leg * 1e6,
+                     "legacy wrapper"))
+        rows.append((f"micro/{name}/program_speedup", speed,
+                     "legacy/program, machine-relative"))
+        print(f"  {name:8s} program={t_prog*1e3:7.2f}ms  "
+              f"legacy={t_leg*1e3:7.2f}ms  ratio={speed:4.2f}x")
+    return rows
+
+
 def bench_kernel_interpret():
     """Sanity timing of the Pallas kernel in interpret mode — both the
     planar and the volumetric (3-D) entry points (correctness path; not
@@ -178,6 +216,7 @@ def run_all(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
                            backends=backends, repeats=repeats)
     rows += bench_fused_epilogue(models, batch, channel_scale,
                                  repeats=repeats)
+    rows += bench_program(models, batch, channel_scale, repeats=repeats)
     rows += bench_kernel_interpret()
     return rows
 

@@ -1,25 +1,35 @@
 """Quickstart: train a tiny DCGAN with the GANAX dataflow on CPU.
 
-Every (transposed) convolution runs through the unified dataflow dispatch
-(`core.dataflow`); pick the execution path with ``--backend``
-(``polyphase`` by default; ``pallas-interpret`` exercises the kernel
-semantics, ``zero-insert`` is the conventional-accelerator baseline).
-Training runs under the fault-tolerant ``TrainLoop`` and finishes with a
-batch of served samples from ``serve.gan.GanServer``::
+This is the **Program API** flow — the supported entry point.  The
+config → policy → epilogue → plan walk runs exactly twice
+(``make_gan_train_step`` builds the generator and discriminator
+programs ahead of the first trace); training replays the frozen
+programs under the fault-tolerant ``TrainLoop``, and serving
+demonstrates the full build → export → load → serve loop: the trained
+generator's program spec is written to JSON, re-loaded as if on a
+fresh serving box, and handed to ``GanServer``::
 
     PYTHONPATH=src python examples/quickstart.py --steps 30
+
+Pick the execution path with ``--backend`` (``polyphase`` by default;
+``pallas-interpret`` exercises the kernel semantics, ``zero-insert`` is
+the conventional-accelerator baseline, ``auto`` consults the repro.tune
+planner — point ``REPRO_TUNE_PLANS`` at a plan file from
+``python -m repro.tune`` for measured plans).
 """
 
 import argparse
+import pathlib
 import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.gan import GanConfig, gan_losses, init_gan
+from repro.models.gan import GanConfig, init_gan
+from repro.program import Program, ProgramSpec
 from repro.serve.gan import GanServer
-from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.loop import LoopConfig, TrainLoop, make_gan_train_step
 
 
 def synthetic_reals(key, batch):
@@ -43,37 +53,19 @@ def main():
     ap.add_argument("--channel-scale", type=float, default=0.0625)
     ap.add_argument("--backend", default="polyphase",
                     help="dataflow backend (polyphase | zero-insert | "
-                         "pallas | pallas-interpret | auto — 'auto' "
-                         "consults the repro.tune planner; point "
-                         "REPRO_TUNE_PLANS at a plan file from "
-                         "`python -m repro.tune` for measured plans)")
+                         "pallas | pallas-interpret | auto)")
     args = ap.parse_args()
 
     cfg = GanConfig(name="dcgan", channel_scale=args.channel_scale,
                     backend=args.backend)
     g_params, d_params = init_gan(cfg, jax.random.PRNGKey(0))
 
-    @jax.jit
-    def train_step(state, batch):
-        g_params, d_params = state
-        z, real = batch["z"], batch["real"]
-
-        def d_loss(d):
-            _, dl, _ = gan_losses(g_params, d, z, real, cfg)
-            return dl
-
-        def g_loss(g):
-            gl, _, _ = gan_losses(g, d_params, z, real, cfg)
-            return gl
-
-        dl, d_grads = jax.value_and_grad(d_loss)(d_params)
-        d_new = jax.tree.map(lambda p, gr: p - args.lr * 5 * gr,
-                             d_params, d_grads)
-        gl, g_grads = jax.value_and_grad(g_loss)(g_params)
-        g_new = jax.tree.map(lambda p, gr: p - args.lr * 5 * gr,
-                             g_params, g_grads)
-        return (g_new, d_new), {"g_loss": gl, "d_loss": dl,
-                                "loss": gl + dl}
+    # One ahead-of-time resolution for the whole run: both networks'
+    # programs are frozen here, before anything traces.
+    train_step, (g_prog, d_prog) = make_gan_train_step(
+        cfg, args.batch, g_lr=args.lr * 5, measure=True)
+    print(g_prog.describe())
+    print(d_prog.describe())
 
     def batch_fn(step):
         # pure function of step → exact replay after any restart
@@ -91,10 +83,17 @@ def main():
     print(f"done: {args.steps} adversarial steps through the "
           f"{args.backend} dataflow in {time.time()-t0:.1f}s")
 
-    server = GanServer(cfg, g_params, batch_size=args.batch)
-    imgs = server.generate(3)
-    print(f"served {imgs.shape[0]} samples {imgs.shape[1:]} "
-          f"in {server.batches_served} batch(es)")
+    # Build → export → load → serve: ship the tuned program as data.
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "generator-program.json"
+        g_prog.save(path)
+        spec = ProgramSpec.load(path)          # a fresh serving process
+        server = GanServer(cfg, g_params, batch_size=args.batch,
+                           program=Program(spec, differentiable=False))
+        imgs = server.generate(3)
+    print(f"served {imgs.shape[0]} samples {imgs.shape[1:]} from the "
+          f"exported program in {server.batches_served} batch(es) "
+          f"({server.samples_buffered} buffered for the next call)")
 
 
 if __name__ == "__main__":

@@ -68,9 +68,12 @@ __all__ = [
     "Backend",
     "DataflowPolicy",
     "Epilogue",
+    "Resolution",
     "ACTIVATIONS",
     "pallas_kernel_supported",
     "backend_supports",
+    "blocks_valid",
+    "resolve_execution",
     "CompiledUops",
     "ConvUops",
     "register_backend",
@@ -790,56 +793,120 @@ def _conv_ep_bwd(backend, strides, paddings, blocks, epilogue, res, g):
 _conv_ep_diff.defvjp(_conv_ep_fwd, _conv_ep_bwd)
 
 
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """One layer's fully resolved execution: the concrete backend, its
+    Pallas tile shapes (``None`` = heuristic defaults or a pure-JAX
+    backend), and the provenance of that choice.
+
+    ``source`` is one of ``"pinned"`` (the policy named a backend or the
+    kernel preference explicitly), ``"tuned"`` (a measured autotuner
+    plan), or ``"heuristic"`` (the platform default, including auto-plan
+    misses).  This is the data form of dispatch — what
+    :class:`repro.program.ProgramSpec` freezes ahead of time."""
+
+    backend: str
+    blocks: tuple[int, ...] | None = None
+    source: str = "heuristic"
+    measured_us: float | None = None
+
+
+def blocks_valid(kind: str, in_spatial: Sequence[int],
+                 kernel: Sequence[int], strides: Sequence[int],
+                 paddings: Sequence[int], cin: int, cout: int,
+                 blocks: Sequence[int]) -> bool:
+    """True when ``blocks`` divides this geometry's kernel extents —
+    a stale plan (or program) entry must degrade, never raise from
+    inside a trace.  ``kind`` is ``"tconv"`` or ``"conv"``."""
+    from repro.kernels.ops import resolve_blocks
+    in_spatial, kernel = tuple(in_spatial), tuple(kernel)
+    strides, paddings = tuple(strides), tuple(paddings)
+    if not pallas_kernel_supported(len(in_spatial)):
+        return False
+    if kind == "conv":
+        u = compile_conv_uops(in_spatial, kernel, strides, paddings)
+        q_lead = u.out_sizes[:-1]
+    else:
+        u = compile_uops(in_spatial, kernel, strides, paddings)
+        q_lead = u.q_sizes[:-1]
+    try:
+        resolve_blocks(tuple(blocks), q_lead, int(cin), int(cout))
+    except ValueError:
+        return False
+    return True
+
+
+def resolve_execution(policy: DataflowPolicy, kind: str,
+                      in_spatial: Sequence[int], kernel: Sequence[int],
+                      strides: Sequence[int], paddings: Sequence[int],
+                      cin: int, cout: int, *, batch: int = 1,
+                      dtype="float32", epilogue: Epilogue | None = None,
+                      planner=None, measure: bool = False) -> Resolution:
+    """Resolve one layer's execution path **as data** — the single
+    resolution routine behind both the per-call dispatch and the
+    ahead-of-time :mod:`repro.program` builder.
+
+    For a non-``auto`` policy this is just ``policy.resolve`` plus
+    provenance.  ``backend="auto"`` consults the autotuning planner
+    (``planner`` or the process-wide one) with the full layer geometry;
+    a hit yields the measured backend + tuned Pallas blocks, with stale
+    plans — unknown backend, unsupported rank, blocks that no longer
+    divide the geometry — degrading to the heuristic rather than
+    raising.  ``measure=True`` additionally tunes plan misses (never do
+    this from dispatch: it may run inside a ``jit`` trace, where timing
+    is meaningless — ahead-of-time builders only)."""
+    nd = len(in_spatial)
+    if policy.backend != "auto":
+        source = "heuristic" if policy.backend is None \
+            and policy.interpret is None else "pinned"
+        return Resolution(policy.resolve(nd), None, source)
+    policy.resolve(nd)  # validates the interpret combination
+    from repro.tune import get_planner
+    from repro.tune.planner import PlanKey
+    if planner is None:
+        planner = get_planner()
+    ep = epilogue or _IDENTITY_EPILOGUE
+    key = PlanKey(kind=kind, batch=int(batch),
+                  in_spatial=tuple(int(d) for d in in_spatial),
+                  kernel=tuple(int(d) for d in kernel),
+                  strides=tuple(int(s) for s in strides),
+                  paddings=tuple(int(p) for p in paddings),
+                  cin=int(cin), cout=int(cout),
+                  dtype=str(jnp.dtype(dtype)),
+                  platform=jax.default_backend(),
+                  **ep.key_fields())
+    plan = planner.plan(key, measure=True) if measure \
+        else planner.lookup(key)
+    if plan is not None and plan.backend in _BACKENDS and \
+            _BACKENDS[plan.backend].supports(nd):
+        blocks = plan.blocks if plan.backend.startswith("pallas") else None
+        if blocks is not None and not blocks_valid(
+                kind, key.in_spatial, key.kernel, key.strides,
+                key.paddings, cin, cout, blocks):
+            blocks = None   # stale blocks (geometry drift): keep the
+            # planned backend, fall back to its default tile shapes
+        source = "tuned" if plan.source == "measured" else "heuristic"
+        return Resolution(plan.backend, blocks, source, plan.measured_us)
+    heuristic = dataclasses.replace(policy, backend=None).resolve(nd)
+    return Resolution(heuristic, None, "heuristic")
+
+
 def _planned_dispatch(policy: DataflowPolicy, transposed: bool, x, w,
                       strides, paddings,
                       epilogue: Epilogue | None = None
                       ) -> tuple[str, tuple | None]:
-    """Resolve (backend, blocks) for one dispatch.
-
-    ``backend="auto"`` consults the autotuning planner with the full
-    layer geometry; a hit yields the measured backend + tuned Pallas
-    blocks (stale plans — unknown backend, unsupported rank, blocks on a
-    non-kernel backend — degrade to the heuristic rather than raising).
-    Lookup only: dispatch may run inside a jit trace, where timing is
-    meaningless, so measurement happens in `repro.tune` entry points."""
+    """Resolve (backend, blocks) for one dispatch — the per-call form of
+    :func:`resolve_execution` (lookup only, never measures)."""
     nd = x.ndim - 2
     if policy.backend != "auto":
         return policy.resolve(nd), None
-    policy.resolve(nd)  # validates the interpret combination
-    from repro.tune import get_planner, plan_key_for_op
-    planner = get_planner()
-    key = plan_key_for_op("tconv" if transposed else "conv", x, w,
-                          strides, paddings, epilogue=epilogue)
-    plan = planner.lookup(key)
-    if plan is not None and plan.backend in _BACKENDS and \
-            _BACKENDS[plan.backend].supports(nd):
-        blocks = plan.blocks if plan.backend.startswith("pallas") else None
-        if blocks is not None and not _blocks_valid(
-                not transposed, x, w, strides, paddings, blocks):
-            blocks = None   # stale blocks (geometry drift): keep the
-            # planned backend, fall back to its default tile shapes
-        return plan.backend, blocks
-    return dataclasses.replace(policy, backend=None).resolve(nd), None
-
-
-def _blocks_valid(is_conv: bool, x, w, strides, paddings, blocks) -> bool:
-    """True when ``blocks`` divides this geometry's kernel extents —
-    a stale plan entry must degrade, never raise from inside a trace."""
-    from repro.kernels.ops import resolve_blocks
-    nd = x.ndim - 2
-    if is_conv:
-        u = compile_conv_uops(x.shape[1:1 + nd], w.shape[:nd], strides,
-                              paddings)
-        q_lead = u.out_sizes[:-1]
-    else:
-        u = compile_uops(x.shape[1:1 + nd], w.shape[:nd], strides,
-                         paddings)
-        q_lead = u.q_sizes[:-1]
-    try:
-        resolve_blocks(blocks, q_lead, int(w.shape[-2]), int(w.shape[-1]))
-    except ValueError:
-        return False
-    return True
+    res = resolve_execution(
+        policy, "tconv" if transposed else "conv",
+        tuple(int(d) for d in x.shape[1:1 + nd]),
+        tuple(int(d) for d in w.shape[:nd]), strides, paddings,
+        int(w.shape[-2]), int(w.shape[-1]), batch=int(x.shape[0]),
+        dtype=x.dtype, epilogue=epilogue)
+    return res.backend, res.blocks
 
 
 def tconv(x: jax.Array, w: jax.Array, strides: Sequence[int],

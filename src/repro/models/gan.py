@@ -24,6 +24,15 @@ single source of truth for the per-layer specs — the autotuner's plan
 keys (``repro.tune.zoo``) are built from the same helpers, so
 ``backend="auto"`` tunes exactly the fused op the model dispatches.
 
+Execution is **ahead-of-time compiled**: ``generator_apply`` /
+``discriminator_apply`` are thin legacy-compatible wrappers over cached
+:class:`repro.program.Program` objects — the config → policy →
+epilogue → plan walk runs once per (config, policy) at program build,
+and the per-call path just replays the frozen
+:class:`~repro.program.LayerExec` records.  New code should build a
+``Program`` directly (``Program.build(cfg, batch, role)``); these
+wrappers keep the historic signatures working.
+
 These power the GAN training examples, the serving engine
 (`serve.gan`), and the wall-clock microbenchmarks (GANAX dataflow vs
 zero-insertion baseline on identical topologies).
@@ -32,6 +41,7 @@ zero-insertion baseline on identical topologies).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -40,14 +50,12 @@ import jax.numpy as jnp
 from repro.configs.gans import GAN_MODELS
 from repro.core.analytical import ConvLayer
 from repro.core.dataflow import DataflowPolicy, Epilogue
-from repro.core.dataflow import conv as df_conv
-from repro.core.dataflow import tconv as df_tconv
 from repro.models.common import PSpec, init_params
 
 __all__ = ["GanConfig", "generator_specs", "discriminator_specs",
            "init_gan", "generator_apply", "discriminator_apply",
            "generator_epilogues", "discriminator_epilogues",
-           "gan_losses"]
+           "bce_with_logits", "gan_losses"]
 
 # The discriminator's LeakyReLU slope (DCGAN convention, used by every
 # Table-I discriminator).
@@ -143,58 +151,76 @@ def discriminator_epilogues(d_layers: Sequence[ConvLayer]
             for i in range(len(d_layers))]
 
 
+@functools.lru_cache(maxsize=64)
+def _cached_program(cfg: GanConfig, policy: DataflowPolicy, role: str,
+                    batch: int):
+    """One frozen Program per (config, policy, role) — the legacy apply
+    functions are thin wrappers over these.  ``batch`` only matters for
+    ``backend="auto"`` plan keys; concrete policies resolve
+    batch-independently, so they cache under batch=0."""
+    from repro.program import Program
+    return Program.build(cfg, max(batch, 1), role, policy=policy,
+                         differentiable=policy.differentiable)
+
+
+def _program_for(cfg: GanConfig, policy: DataflowPolicy | None,
+                 role: str, batch: int):
+    policy = policy or cfg.policy
+    if policy.backend == "auto":
+        # auto resolution is a planner snapshot: rebuild per call (cheap
+        # — lookups only, never measures) so fresh plans take effect,
+        # exactly like the per-dispatch consult this API replaces
+        from repro.program import Program
+        return Program.build(cfg, batch, role, policy=policy,
+                             differentiable=policy.differentiable)
+    return _cached_program(cfg, policy, role, 0)
+
+
 def generator_apply(params, z, cfg: GanConfig,
                     policy: DataflowPolicy | None = None):
     """z (B, z_dim) → image (B, *spatial, C).
 
-    Every conv layer's bias+activation runs as a fused epilogue inside
-    the unified op — no out-of-kernel ``+ b`` / activation on the conv
-    path (only the z-projection MLP keeps its own bias/ReLU)."""
-    g_layers, _ = cfg.layers
-    first = g_layers[0]
-    policy = policy or cfg.policy
-    x = z @ params["proj_w"] + params["proj_b"]
-    x = x.reshape((z.shape[0],) + tuple(first.in_spatial) + (first.cin,))
-    x = jax.nn.relu(x)
-    for i, (l, ep) in enumerate(zip(g_layers,
-                                    generator_epilogues(g_layers))):
-        w = params[f"t{i}_w"]
-        b = params[f"t{i}_b"]
-        # encoder stages inside an encoder-decoder generator are plain
-        # convs; both ops take the same fused epilogue
-        op = df_tconv if l.transposed else df_conv
-        x = op(x, w, l.strides, l.paddings, policy=policy,
-               bias=b, epilogue=ep)
-    return x
+    Legacy-compatible wrapper over a cached ahead-of-time
+    :class:`repro.program.Program`: the layer walk (config → policy →
+    epilogues → plans) runs once at program build, not per call.  Every
+    conv layer's bias+activation runs as a fused epilogue inside the
+    unified op (only the z-projection MLP keeps its own bias/ReLU)."""
+    prog = _program_for(cfg, policy, "generator", int(z.shape[0]))
+    return prog.forward(params, z)
 
 
 def discriminator_apply(params, img, cfg: GanConfig,
                         policy: DataflowPolicy | None = None):
-    """img (B, *spatial, C) → logits (B,).  Bias + LeakyReLU run as
-    fused epilogues inside the unified conv op."""
-    _, d_layers = cfg.layers
-    x = img
-    policy = policy or cfg.policy
-    for i, (l, ep) in enumerate(zip(d_layers,
-                                    discriminator_epilogues(d_layers))):
-        w = params[f"c{i}_w"]
-        b = params[f"c{i}_b"]
-        x = df_conv(x, w, l.strides, l.paddings, policy=policy,
-                    bias=b, epilogue=ep)
-    return x.reshape(img.shape[0], -1).mean(axis=-1)
+    """img (B, *spatial, C) → logits (B,).  Same program-backed wrapper
+    as :func:`generator_apply`; bias + LeakyReLU run as fused epilogues
+    inside the unified conv op."""
+    prog = _program_for(cfg, policy, "discriminator", int(img.shape[0]))
+    return prog.forward(params, img)
 
 
-def gan_losses(g_params, d_params, z, real, cfg: GanConfig):
-    """Non-saturating GAN losses (generator, discriminator)."""
-    fake = generator_apply(g_params, z, cfg)
-    d_fake = discriminator_apply(d_params, fake, cfg)
-    d_real = discriminator_apply(d_params, real, cfg)
+def bce_with_logits(logits, target):
+    """Numerically stable binary cross-entropy on logits."""
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * target +
+        jnp.log1p(jnp.exp(-jnp.abs(logits))))
 
-    def bce(logits, target):
-        return jnp.mean(
-            jnp.maximum(logits, 0) - logits * target +
-            jnp.log1p(jnp.exp(-jnp.abs(logits))))
 
-    d_loss = bce(d_real, 1.0) + bce(d_fake, 0.0)
-    g_loss = bce(d_fake, 1.0)
+def gan_losses(g_params, d_params, z, real, cfg: GanConfig,
+               programs=None):
+    """Non-saturating GAN losses (generator, discriminator).
+
+    ``programs`` — an optional ``(generator Program, discriminator
+    Program)`` pair — skips even the cached-program lookup: the train
+    loop builds both once and threads them here."""
+    if programs is not None:
+        g_prog, d_prog = programs
+        fake = g_prog.forward(g_params, z)
+        d_fake = d_prog.forward(d_params, fake)
+        d_real = d_prog.forward(d_params, real)
+    else:
+        fake = generator_apply(g_params, z, cfg)
+        d_fake = discriminator_apply(d_params, fake, cfg)
+        d_real = discriminator_apply(d_params, real, cfg)
+    d_loss = bce_with_logits(d_real, 1.0) + bce_with_logits(d_fake, 0.0)
+    g_loss = bce_with_logits(d_fake, 1.0)
     return g_loss, d_loss, fake

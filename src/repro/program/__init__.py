@@ -1,0 +1,26 @@
+"""`repro.program` — ahead-of-time compiled GAN executables.
+
+The public way to run a GAN in this repo, replacing per-call
+config → policy → epilogue → plan threading with GANAX-style
+ahead-of-time specialization:
+
+* :class:`ProgramSpec` (:mod:`repro.program.spec`) — ``build(cfg,
+  batch, role)`` walks the layers **once** and freezes a tuple of
+  :class:`LayerExec` records (geometry, fused epilogue, the resolved
+  concrete backend + Pallas blocks, provenance).  Specs round-trip
+  through JSON: tune on one box, export, serve on another — with zero
+  re-measurement.
+* :class:`Program` (:mod:`repro.program.runtime`) — wraps a spec into
+  one jitted callable ``apply(params, x)`` plus ``describe()``.
+* :func:`load_or_build` — the degrading loader: corrupt / stale /
+  mismatched program files fall back to fresh resolution.
+* ``python -m repro.program <model>`` — build + describe (and
+  export/load) programs from the command line.
+"""
+
+from repro.program.runtime import Program, load_or_build
+from repro.program.spec import (PROGRAM_FORMAT_VERSION, LayerExec,
+                                ProgramSpec)
+
+__all__ = ["LayerExec", "Program", "ProgramSpec", "load_or_build",
+           "PROGRAM_FORMAT_VERSION"]

@@ -1,0 +1,133 @@
+"""The executable form of a :class:`~repro.program.ProgramSpec`.
+
+A :class:`Program` binds a frozen spec to **one** jitted callable:
+``program.apply(params, x)`` traces the whole network once (per input
+shape/dtype) and replays the compiled executable afterwards — no
+per-call config → policy → plan threading anywhere on the hot path.
+The per-layer policies are concrete pinned backends (the spec resolved
+them ahead of time), so tracing never touches the autotuning planner:
+an exported program serves on a planner-less process with zero
+measurements.
+"""
+
+from __future__ import annotations
+
+import logging
+
+import jax
+
+from repro.core.dataflow import DataflowPolicy
+from repro.core.dataflow import conv as df_conv
+from repro.core.dataflow import tconv as df_tconv
+from repro.program.spec import ProgramSpec
+
+__all__ = ["Program", "load_or_build"]
+
+log = logging.getLogger(__name__)
+
+
+class Program:
+    """One GAN network as an ahead-of-time compiled executable.
+
+    ``forward`` is the traceable (unjitted) computation — use it inside
+    a larger ``jit`` (a train step, a loss);  ``apply`` is the jitted
+    standalone entry point serving uses.  ``traces`` counts actual
+    traces of ``apply`` — the executable-reuse contract is testable:
+    repeated same-shape calls keep it at 1.
+    """
+
+    def __init__(self, spec: ProgramSpec, *, differentiable: bool = True):
+        self.spec = spec
+        self.differentiable = bool(differentiable)
+        self._policies = tuple(
+            DataflowPolicy(backend=le.backend,
+                           differentiable=self.differentiable)
+            for le in spec.layers)
+        self.traces = 0
+
+        def _traced(params, x):
+            self.traces += 1
+            return self.forward(params, x)
+        self._apply = jax.jit(_traced)
+
+    @classmethod
+    def build(cls, cfg, batch: int, role: str = "generator", *,
+              policy: DataflowPolicy | None = None, planner=None,
+              measure: bool = False, dtype: str = "float32",
+              differentiable: bool = True) -> "Program":
+        """:meth:`ProgramSpec.build` + wrap — the one-call form."""
+        spec = ProgramSpec.build(cfg, batch, role, policy=policy,
+                                 planner=planner, measure=measure,
+                                 dtype=dtype)
+        return cls(spec, differentiable=differentiable)
+
+    # -- execution ----------------------------------------------------------
+    def forward(self, params, x):
+        """Replay the frozen layer records (traceable; donate to ``jit``
+        via :meth:`apply` or embed in a caller's trace)."""
+        spec = self.spec
+        if spec.role == "generator":
+            first = spec.layers[0]
+            x = x @ params["proj_w"] + params["proj_b"]
+            x = x.reshape((x.shape[0],) + first.in_spatial
+                          + (first.cin,))
+            x = jax.nn.relu(x)
+        batch = x.shape[0]
+        for le, policy in zip(spec.layers, self._policies):
+            w = params[le.w_param]
+            b = params[le.b_param] if le.bias else None
+            op = df_tconv if le.kind == "tconv" else df_conv
+            x = op(x, w, le.strides, le.paddings, policy=policy,
+                   blocks=le.blocks, bias=b, epilogue=le.epilogue)
+        if spec.role == "discriminator":
+            x = x.reshape(batch, -1).mean(axis=-1)
+        return x
+
+    def apply(self, params, x):
+        """The jitted executable: one trace per input shape, then the
+        cached computation — serving's hot path."""
+        return self._apply(params, x)
+
+    # -- passthroughs -------------------------------------------------------
+    def describe(self) -> str:
+        return self.spec.describe()
+
+    def save(self, path) -> None:
+        self.spec.save(path)
+
+    def __repr__(self) -> str:
+        return (f"Program({self.spec.model}/{self.spec.role}, "
+                f"{len(self.spec.layers)} layers, "
+                f"{self.spec.summary()}, traces={self.traces})")
+
+
+def load_or_build(path, cfg, batch: int, role: str = "generator", *,
+                  policy: DataflowPolicy | None = None, planner=None,
+                  measure: bool = False, dtype: str = "float32",
+                  differentiable: bool = True) -> tuple[Program, bool]:
+    """Load an exported program file, falling back to fresh resolution.
+
+    Returns ``(program, loaded)``.  ``loaded=False`` means the file was
+    missing, corrupt, version-skewed, named unknown backends/stale
+    blocks, or froze a different workload than ``cfg`` builds now
+    (topology / channel-scale / epilogue drift) — in every such case the
+    program is rebuilt from ``cfg`` exactly as :meth:`Program.build`
+    would, so a bad file degrades the optimization, never the service.
+    """
+    fresh = ProgramSpec.build(cfg, batch, role, policy=policy,
+                              planner=planner, measure=False,
+                              dtype=dtype)
+    try:
+        spec = ProgramSpec.load(path)
+        if spec.geometry_signature() != fresh.geometry_signature():
+            raise ValueError("program file froze a different workload "
+                             "than this config builds")
+    except Exception as e:   # corrupt/stale file → fresh resolution
+        log.warning("ignoring program file %s (%s: %s); rebuilding from "
+                    "config", path, type(e).__name__, e)
+        if measure:   # the fallback still honors the warmup request
+            fresh = ProgramSpec.build(cfg, batch, role, policy=policy,
+                                      planner=planner, measure=True,
+                                      dtype=dtype)
+        return Program(fresh, differentiable=differentiable), False
+    return Program(spec, differentiable=differentiable), True

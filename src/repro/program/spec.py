@@ -1,0 +1,340 @@
+"""Declarative, ahead-of-time-resolved GAN execution specs.
+
+GANAX's core move is ahead-of-time specialization: a deconv layer's
+access patterns are static, so the accelerator compiles one microprogram
+per output-row pattern *once* and then executes flat-out.  This module
+lifts that principle to the model level.  :meth:`ProgramSpec.build`
+walks a :class:`~repro.models.gan.GanConfig`'s layers **once** and
+freezes a tuple of :class:`LayerExec` records — op kind, geometry,
+fused epilogue, the resolved concrete backend + Pallas block shapes,
+and the resolution's provenance (``pinned`` / ``tuned`` /
+``heuristic``).  Nothing is re-resolved per call: the runtime
+(:class:`repro.program.Program`) replays the frozen records.
+
+Specs round-trip through JSON (:meth:`ProgramSpec.to_json` /
+:meth:`ProgramSpec.from_json`), so a program tuned on a measurement box
+can be exported and loaded on a serving box with **zero** planner
+measurements — the serving process never needs a planner at all.
+``from_json`` validates hard (version, backends, ranks, block shapes):
+a stale or corrupt file raises ``ValueError`` so loaders can fall back
+to fresh resolution (see :func:`repro.program.load_or_build`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.core.dataflow import (DataflowPolicy, Epilogue,
+                                 available_backends, backend_supports,
+                                 blocks_valid, resolve_execution)
+
+__all__ = ["LayerExec", "ProgramSpec", "PROGRAM_FORMAT_VERSION", "ROLES"]
+
+PROGRAM_FORMAT_VERSION = 1
+
+ROLES = ("generator", "discriminator")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerExec:
+    """One frozen layer execution record of a compiled GAN program.
+
+    The geometry fields mirror :class:`~repro.core.analytical.ConvLayer`;
+    ``w_param`` / ``b_param`` name the entries of the params dict the
+    runtime reads; ``backend`` / ``blocks`` are the *concrete* resolved
+    execution path (never ``"auto"`` or a preference form); ``source``
+    records where that resolution came from (``pinned`` / ``tuned`` /
+    ``heuristic``) and ``measured_us`` the winning plan's wall-clock
+    when it was tuned.
+    """
+
+    name: str
+    kind: str                       # "tconv" | "conv"
+    in_spatial: tuple[int, ...]
+    kernel: tuple[int, ...]
+    strides: tuple[int, ...]
+    paddings: tuple[int, ...]
+    cin: int
+    cout: int
+    w_param: str
+    b_param: str | None
+    bias: bool
+    activation: str
+    leaky_slope: float
+    backend: str
+    blocks: tuple[int, ...] | None
+    source: str                     # "pinned" | "tuned" | "heuristic"
+    measured_us: float | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("tconv", "conv"):
+            raise ValueError(f"unknown layer kind {self.kind!r}")
+        if self.source not in ("pinned", "tuned", "heuristic"):
+            raise ValueError(f"unknown resolution source {self.source!r}")
+        # constructing the epilogue validates activation/leaky_slope —
+        # a corrupt program file must fail here, not at first trace
+        Epilogue(bias=self.bias, activation=self.activation,
+                 leaky_slope=self.leaky_slope)
+        if self.bias and self.b_param is None:
+            raise ValueError(f"layer {self.name!r} has bias=True but "
+                             f"no b_param")
+
+    @property
+    def nd(self) -> int:
+        return len(self.in_spatial)
+
+    @property
+    def epilogue(self) -> Epilogue:
+        return Epilogue(bias=self.bias, activation=self.activation,
+                        leaky_slope=self.leaky_slope)
+
+    def plan_key(self, batch: int, dtype: str, platform: str):
+        """The autotuner :class:`~repro.tune.PlanKey` of this layer —
+        the single source the tuner's zoo entry points key plans on."""
+        from repro.tune.planner import PlanKey
+        return PlanKey(kind=self.kind, batch=int(batch),
+                       in_spatial=self.in_spatial, kernel=self.kernel,
+                       strides=self.strides, paddings=self.paddings,
+                       cin=self.cin, cout=self.cout, dtype=dtype,
+                       platform=platform, **self.epilogue.key_fields())
+
+    def geometry_signature(self) -> tuple:
+        """The layer's workload identity (everything but the resolved
+        execution) — what a program file must match to serve a config."""
+        return (self.name, self.kind, self.in_spatial, self.kernel,
+                self.strides, self.paddings, self.cin, self.cout,
+                self.bias, self.activation, self.leaky_slope)
+
+    def describe(self) -> str:
+        sp = "x".join(map(str, self.in_spatial))
+        k = "x".join(map(str, self.kernel))
+        s = "x".join(map(str, self.strides))
+        exec_ = self.backend
+        if self.blocks:
+            exec_ += f"[{'x'.join(map(str, self.blocks))}]"
+        us = "" if self.measured_us is None \
+            else f"  {self.measured_us:.0f}us"
+        return (f"{self.name}: {self.kind} {sp} k{k} s{s} "
+                f"{self.cin}->{self.cout}  ep[{self.epilogue.describe()}]"
+                f"  -> {exec_}  ({self.source}{us})")
+
+    def to_json(self) -> dict:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)}
+        d["blocks"] = list(self.blocks) if self.blocks else None
+        for f in ("in_spatial", "kernel", "strides", "paddings"):
+            d[f] = list(d[f])
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LayerExec":
+        names = {f.name for f in dataclasses.fields(cls)}
+        if not (names - {"measured_us"} <= set(d) <= names):
+            raise ValueError(f"bad layer fields: {sorted(d)}")
+        d = dict(d)
+        for f in ("in_spatial", "kernel", "strides", "paddings"):
+            d[f] = tuple(int(v) for v in d[f])
+        for f in ("cin", "cout"):
+            d[f] = int(d[f])
+        if d.get("blocks") is not None:
+            d["blocks"] = tuple(int(v) for v in d["blocks"])
+        le = cls(**d)
+        # the epilogue/kind/source checks ran in __post_init__; now the
+        # executable part: the backend must exist, run this rank, and
+        # (for the kernel backends) accept the recorded tile shapes
+        if le.backend not in available_backends():
+            raise ValueError(f"unknown backend {le.backend!r} in layer "
+                             f"{le.name!r}")
+        if not backend_supports(le.backend, le.nd):
+            raise ValueError(f"backend {le.backend!r} does not support "
+                             f"{le.nd}-D layer {le.name!r}")
+        if le.blocks is not None:
+            if not le.backend.startswith("pallas"):
+                raise ValueError(f"layer {le.name!r} carries blocks on "
+                                 f"non-kernel backend {le.backend!r}")
+            if not blocks_valid(le.kind, le.in_spatial, le.kernel,
+                                le.strides, le.paddings, le.cin, le.cout,
+                                le.blocks):
+                raise ValueError(f"stale blocks {le.blocks} for layer "
+                                 f"{le.name!r}")
+        return le
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """A frozen, fully resolved execution plan for one GAN network.
+
+    ``batch`` is the *planning* batch — the batch size the autotuner
+    plans were keyed on; the runtime accepts any batch (a new batch
+    shape is just a retrace of the same frozen records).  ``platform``
+    records where the spec was resolved (provenance — a pinned program
+    executes its recorded backends wherever it loads).
+    ``requested_backend`` preserves the policy form the spec was built
+    from (``None`` = heuristic), purely for display.
+    """
+
+    model: str
+    role: str                       # "generator" | "discriminator"
+    batch: int
+    z_dim: int | None               # generator programs only
+    channel_scale: float
+    dtype: str
+    platform: str
+    requested_backend: str | None
+    layers: tuple[LayerExec, ...]
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown program role {self.role!r}; "
+                             f"one of {ROLES}")
+        if not self.layers:
+            raise ValueError("a program needs at least one layer")
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, cfg, batch: int, role: str = "generator", *,
+              policy: DataflowPolicy | None = None, planner=None,
+              measure: bool = False, dtype: str = "float32"
+              ) -> "ProgramSpec":
+        """Walk ``cfg``'s layers once and freeze every resolution.
+
+        ``policy`` defaults to ``cfg.policy``.  With
+        ``backend="auto"`` each layer consults the autotuning planner
+        (``planner`` or the process-wide one); ``measure=True``
+        additionally tunes plan misses — the ahead-of-time analogue of
+        the old per-call warmup, and the only place measurement belongs.
+        """
+        from repro.models.gan import (discriminator_epilogues,
+                                      generator_epilogues)
+        if role not in ROLES:
+            raise ValueError(f"unknown program role {role!r}; "
+                             f"one of {ROLES}")
+        policy = policy or cfg.policy
+        g_layers, d_layers = cfg.layers
+        if role == "generator":
+            layers, prefix = g_layers, "t"
+            epilogues = generator_epilogues(g_layers)
+        else:
+            layers, prefix = d_layers, "c"
+            epilogues = discriminator_epilogues(d_layers)
+        records = []
+        for i, (l, ep) in enumerate(zip(layers, epilogues)):
+            kind = "tconv" if l.transposed else "conv"
+            res = resolve_execution(
+                policy, kind, l.in_spatial, l.kernel, l.strides,
+                l.paddings, l.cin, l.cout, batch=batch, dtype=dtype,
+                epilogue=ep, planner=planner, measure=measure)
+            records.append(LayerExec(
+                name=l.name, kind=kind,
+                in_spatial=tuple(l.in_spatial), kernel=tuple(l.kernel),
+                strides=tuple(l.strides), paddings=tuple(l.paddings),
+                cin=int(l.cin), cout=int(l.cout),
+                w_param=f"{prefix}{i}_w",
+                b_param=f"{prefix}{i}_b" if ep.bias else None,
+                bias=ep.bias, activation=ep.activation,
+                leaky_slope=ep.leaky_slope,
+                backend=res.backend, blocks=res.blocks,
+                source=res.source, measured_us=res.measured_us))
+        return cls(model=cfg.name, role=role, batch=int(batch),
+                   z_dim=int(cfg.z_dim) if role == "generator" else None,
+                   channel_scale=float(cfg.channel_scale), dtype=dtype,
+                   platform=jax.default_backend(),
+                   requested_backend=policy.backend,
+                   layers=tuple(records))
+
+    # -- queries ------------------------------------------------------------
+    def plan_keys(self) -> list[tuple[str, object]]:
+        """(layer name, :class:`~repro.tune.PlanKey`) per layer — what
+        the tuner's zoo entry points iterate instead of re-deriving
+        layer groups themselves."""
+        return [(le.name, le.plan_key(self.batch, self.dtype,
+                                      self.platform))
+                for le in self.layers]
+
+    def geometry_signature(self) -> tuple:
+        """The whole network's workload identity: a loaded spec whose
+        signature differs from a freshly built one is stale (topology or
+        scaling drift) and must not serve."""
+        return (self.model, self.role, self.z_dim, tuple(
+            le.geometry_signature() for le in self.layers))
+
+    def summary(self) -> str:
+        """One-line resolution summary (the repr-sized form of
+        :meth:`describe`)."""
+        if self.requested_backend == "auto":
+            per_layer = ", ".join(
+                f"{le.name}->{le.backend}"
+                + (f"[{'x'.join(map(str, le.blocks))}]" if le.blocks
+                   else "")
+                for le in self.layers)
+            return f"auto({per_layer})"
+        backends = sorted({le.backend for le in self.layers})
+        return backends[0] if len(backends) == 1 \
+            else f"mixed({', '.join(backends)})"
+
+    def describe(self) -> str:
+        """The human-readable program listing: header plus one line per
+        frozen layer record."""
+        head = (f"program {self.model}/{self.role}  "
+                f"batch={self.batch}  dtype={self.dtype}  "
+                f"platform={self.platform}  "
+                f"policy={self.requested_backend or 'heuristic'}  "
+                f"({len(self.layers)} layers)")
+        return "\n".join([head] + [f"  {le.describe()}"
+                                   for le in self.layers])
+
+    # -- persistence --------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "version": PROGRAM_FORMAT_VERSION,
+            "model": self.model, "role": self.role, "batch": self.batch,
+            "z_dim": self.z_dim, "channel_scale": self.channel_scale,
+            "dtype": self.dtype, "platform": self.platform,
+            "requested_backend": self.requested_backend,
+            "layers": [le.to_json() for le in self.layers],
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "ProgramSpec":
+        if not isinstance(doc, dict):
+            raise ValueError(f"program doc must be a dict, got "
+                             f"{type(doc).__name__}")
+        if doc.get("version") != PROGRAM_FORMAT_VERSION:
+            raise ValueError(f"unsupported program version "
+                             f"{doc.get('version')!r} "
+                             f"(want {PROGRAM_FORMAT_VERSION})")
+        layers = doc.get("layers")
+        if not isinstance(layers, list) or not layers:
+            raise ValueError("program doc has no 'layers' list")
+        z_dim = doc.get("z_dim")
+        return cls(model=str(doc["model"]), role=str(doc["role"]),
+                   batch=int(doc["batch"]),
+                   z_dim=None if z_dim is None else int(z_dim),
+                   channel_scale=float(doc.get("channel_scale", 1.0)),
+                   dtype=str(doc.get("dtype", "float32")),
+                   platform=str(doc.get("platform", "cpu")),
+                   requested_backend=doc.get("requested_backend"),
+                   layers=tuple(LayerExec.from_json(d) for d in layers))
+
+    def save(self, path) -> None:
+        """Atomically write the spec's JSON document to ``path``."""
+        path = os.fspath(path)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path) -> "ProgramSpec":
+        """Read + validate a spec JSON file (raises on corrupt/stale —
+        use :func:`repro.program.load_or_build` for the degrading
+        form)."""
+        with open(path) as f:
+            return cls.from_json(json.load(f))

@@ -1,26 +1,29 @@
-"""Batched GAN image-generation service on the unified dataflow dispatch.
+"""Batched GAN image-generation service on ahead-of-time compiled
+programs.
 
 The serving analogue of `serve.engine.DecodeEngine` for the GAN
-workloads: a fixed-batch jitted generator (jit-stable shapes — one trace,
-one μop compilation per layer geometry thanks to the ``core.dataflow``
-cache).  A ``generate(n)`` call rounds work up to full batches and slices
-the tail; ``samples_served`` / ``samples_discarded`` account for every
-sample the generator produced (discarded tail samples are real compute —
-they must be visible to capacity planning, not silently dropped).
+workloads.  On construction the server builds (or is handed) one
+:class:`repro.program.Program`: the config → policy → epilogue → plan
+walk happens exactly once, ahead of the first trace, and the hot path is
+the program's single jitted executable — there is no per-request (or
+even per-trace) resolution left.  With ``backend="auto"`` the build
+**measures** a plan for every generator-layer geometry (zero
+measurements when the planner's plan file is already warm); the frozen
+per-layer resolutions are exposed via ``server.describe()`` and the
+one-line summary in ``repr``.  A program exported from a tuning box
+(``ProgramSpec.save``) can be served directly by passing ``program=``.
+
+``generate(n)`` rounds work up to full batches but **discards nothing**:
+tail samples beyond ``n`` are carried in a remainder buffer and served
+first on the next call, so under ``n % batch_size != 0`` traffic every
+generated sample is eventually served.  ``samples_served`` /
+``samples_buffered`` / ``samples_discarded`` account for every sample
+the generator produced (``samples_discarded`` stays 0 while the buffer
+carries remainders; it exists so capacity planning can trust the
+invariant ``served + buffered + discarded == batches x batch_size``).
 Calls are synchronous and the server is single-threaded: it advances its
 own RNG state per batch, so drive it from one thread (or shard requests
 across servers with distinct seeds).
-
-The execution path is the server's :class:`~repro.core.dataflow
-.DataflowPolicy` (default: the config's own policy; pass
-``DataflowPolicy()`` explicitly for platform auto-selection).  With
-``backend="auto"`` the server **warms the autotuning planner on
-construction**: every generator-layer geometry — keyed on the fused
-bias+activation epilogue the model actually dispatches — gets a
-measured plan before the first jit trace, so the traced executable runs
-the tuned backends/block shapes (zero measurements when the planner's
-plan file is already warm).  The resolved per-layer plans are exposed
-in ``repr``.
 """
 
 from __future__ import annotations
@@ -29,7 +32,8 @@ import jax
 import numpy as np
 
 from repro.core.dataflow import DataflowPolicy
-from repro.models.gan import GanConfig, generator_apply
+from repro.models.gan import GanConfig
+from repro.program import Program, ProgramSpec
 
 __all__ = ["GanServer"]
 
@@ -37,7 +41,8 @@ __all__ = ["GanServer"]
 class GanServer:
     def __init__(self, cfg: GanConfig, g_params, batch_size: int = 8,
                  policy: DataflowPolicy | None = None, seed: int = 0,
-                 warm_plans: bool = True):
+                 warm_plans: bool = True,
+                 program: Program | None = None):
         if int(batch_size) <= 0:
             raise ValueError(f"batch_size must be positive, "
                              f"got {batch_size}")
@@ -49,59 +54,80 @@ class GanServer:
         self.batches_served = 0
         self.samples_served = 0
         self.samples_discarded = 0
-        self.plans: dict[str, object] = {}
-        if self.policy.backend == "auto" and warm_plans:
-            from repro.tune import get_planner, warm_gan_plans
-            self.plans = warm_gan_plans(cfg, self.batch_size,
-                                        get_planner(),
-                                        generator_only=True)
+        self._spare: np.ndarray | None = None   # carried tail samples
+        if program is not None:
+            if program.spec.role != "generator":
+                raise ValueError(f"GanServer needs a generator program, "
+                                 f"got role={program.spec.role!r}")
+            # a mismatched program file must fail here with a clear
+            # error, not as a shape mismatch inside the first trace
+            # (the heuristic-policy walk below touches no planner)
+            expected = ProgramSpec.build(cfg, self.batch_size,
+                                         "generator",
+                                         policy=DataflowPolicy())
+            if program.spec.geometry_signature() != \
+                    expected.geometry_signature():
+                raise ValueError(
+                    f"program {program.spec.model!r} froze a different "
+                    f"workload than config {cfg.name!r} builds "
+                    f"(topology / z_dim / channel-scale / epilogue "
+                    f"drift)")
+            self.program = program
+        else:
+            # measure=warm_plans: an auto policy tunes every layer plan
+            # ahead of the first trace (a no-op for concrete policies,
+            # and zero measurements when the plan cache is warm)
+            self.program = Program.build(
+                cfg, self.batch_size, "generator", policy=self.policy,
+                measure=warm_plans, differentiable=False)
+        self._generate = self.program.apply
 
-        @jax.jit
-        def _generate(params, z):
-            return generator_apply(params, z, cfg, policy=self.policy)
-        self._generate = _generate
+    @property
+    def samples_buffered(self) -> int:
+        return 0 if self._spare is None else len(self._spare)
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
 
     def generate(self, n: int) -> np.ndarray:
-        """Generate ``n`` images (n, *spatial, C) as numpy."""
+        """Generate ``n`` images (n, *spatial, C) as numpy.  Remainder
+        samples from the final batch are buffered for the next call,
+        never discarded."""
         if int(n) <= 0:
             raise ValueError(f"n must be positive, got {n}")
         outs = []
         remaining = int(n)
+        if self._spare is not None:
+            take = min(len(self._spare), remaining)
+            outs.append(self._spare[:take])
+            spare = self._spare[take:]
+            self._spare = spare if len(spare) else None
+            self.samples_served += take
+            remaining -= take
         while remaining > 0:
             z = jax.random.normal(self._next_key(),
                                   (self.batch_size, self.cfg.z_dim))
-            img = self._generate(self.params, z)
+            img = np.asarray(self._generate(self.params, z))
             self.batches_served += 1
             take = min(self.batch_size, remaining)
             self.samples_served += take
-            self.samples_discarded += self.batch_size - take
-            outs.append(np.asarray(img[:take]))
-            remaining -= self.batch_size
+            remaining -= take
+            outs.append(img[:take])
+            if take < self.batch_size:
+                self._spare = img[take:]
         return np.concatenate(outs, axis=0)
 
-    def resolved_policy(self) -> str:
-        """Human-readable resolution of this server's policy: the pinned
-        or heuristic backend name, or — for ``backend="auto"`` — the
-        per-layer tuned plans from the construction warmup."""
-        if self.policy.backend != "auto":
-            g_layers, _ = self.cfg.layers
-            return self.policy.resolve(len(g_layers[0].in_spatial))
-        if not self.plans:
-            return "auto(unplanned→heuristic)"
-        per_layer = ", ".join(
-            f"{name.split('/', 1)[1]}→{plan.backend}"
-            + (f"[{'x'.join(map(str, plan.blocks))}]" if plan.blocks
-               else "")
-            for name, plan in self.plans.items())
-        return f"auto({per_layer})"
+    def describe(self) -> str:
+        """The server's frozen execution: the program's per-layer
+        records (op, geometry, epilogue, resolved backend/blocks,
+        provenance)."""
+        return self.program.describe()
 
     def __repr__(self) -> str:
         return (f"GanServer(model={self.cfg.name!r}, "
                 f"batch_size={self.batch_size}, "
-                f"policy={self.resolved_policy()}, "
+                f"policy={self.program.spec.summary()}, "
                 f"served={self.samples_served}, "
+                f"buffered={self.samples_buffered}, "
                 f"discarded={self.samples_discarded})")

@@ -26,7 +26,58 @@ import jax
 
 from repro.train import checkpoint as ckpt
 
-__all__ = ["LoopConfig", "TrainLoop", "InjectedFailure"]
+__all__ = ["LoopConfig", "TrainLoop", "InjectedFailure",
+           "make_gan_train_step"]
+
+
+def make_gan_train_step(cfg, batch: int, *, g_lr: float = 2e-4,
+                        d_lr: float | None = None, policy=None,
+                        planner=None, measure: bool = False):
+    """Program-backed adversarial SGD step for a ``GanConfig``.
+
+    Builds the generator and discriminator
+    :class:`repro.program.Program` **once** — the whole
+    config → policy → epilogue → plan walk happens here, ahead of the
+    first trace — and returns ``(train_step, (g_program, d_program))``
+    where ``train_step(state, batch)`` is a jitted
+    ``((g_params, d_params), {"z", "real"}) → (state, metrics)`` that
+    replays the frozen programs every step.  ``measure=True`` tunes
+    plan misses at build for an ``auto`` policy (never during the
+    loop)."""
+    from repro.models.gan import bce_with_logits
+    from repro.program import Program
+
+    d_lr = g_lr if d_lr is None else d_lr
+    g_prog = Program.build(cfg, batch, "generator", policy=policy,
+                           planner=planner, measure=measure)
+    d_prog = Program.build(cfg, batch, "discriminator", policy=policy,
+                           planner=planner, measure=measure)
+
+    def losses(g_params, d_params, z, real):
+        fake = g_prog.forward(g_params, z)
+        d_fake = d_prog.forward(d_params, fake)
+        d_real = d_prog.forward(d_params, real)
+        d_loss = bce_with_logits(d_real, 1.0) + \
+            bce_with_logits(d_fake, 0.0)
+        g_loss = bce_with_logits(d_fake, 1.0)
+        return g_loss, d_loss
+
+    @jax.jit
+    def train_step(state, batch):
+        g_params, d_params = state
+        z, real = batch["z"], batch["real"]
+        dl, d_grads = jax.value_and_grad(
+            lambda d: losses(g_params, d, z, real)[1])(d_params)
+        d_new = jax.tree.map(lambda p, g: p - d_lr * g, d_params,
+                             d_grads)
+        gl, g_grads = jax.value_and_grad(
+            lambda g: losses(g, d_new, z, real)[0])(g_params)
+        g_new = jax.tree.map(lambda p, g: p - g_lr * g, g_params,
+                             g_grads)
+        return (g_new, d_new), {"g_loss": gl, "d_loss": dl,
+                                "loss": gl + dl}
+
+    return train_step, (g_prog, d_prog)
 
 
 class InjectedFailure(RuntimeError):

@@ -1,11 +1,14 @@
 """Tuning entry points for the Table-I GAN model zoo.
 
-``layer_plan_keys`` turns a ``GanConfig``'s layer topology into plan
-keys; ``warm_gan_plans`` resolves (measuring on miss) a plan for every
-layer — this is what ``GanServer`` runs on construction so a
-``backend="auto"`` server's first jit trace finds every plan already
-warm; ``tune_model_zoo`` drives the whole zoo and produces the
-``BENCH_tune.json`` payload (tuned vs heuristic wall-clock per model).
+The per-model layer walk lives in :class:`repro.program.ProgramSpec` —
+the zoo derives every plan key from a built spec
+(``spec.plan_keys()``), so the tuner keys exactly the fused ops the
+programs execute, with no duplicated layer-group/epilogue threading
+here.  ``layer_plan_keys`` turns a raw layer topology into plan keys
+(the spec-free form); ``warm_gan_plans`` resolves (measuring on miss) a
+plan for every layer of a config; ``tune_model_zoo`` drives the whole
+zoo and produces the ``BENCH_tune.json`` payload (tuned vs heuristic
+wall-clock per model).
 """
 
 from __future__ import annotations
@@ -50,17 +53,25 @@ def layer_plan_keys(layers, batch: int, dtype: str = "float32",
     return out
 
 
-def _gan_layer_groups(cfg, *, generator_only: bool = False):
-    """(prefix, layers, epilogues) per network of a ``GanConfig`` — the
-    epilogues come from the model's own helpers so tuner keys and model
-    dispatches agree."""
-    from repro.models.gan import (discriminator_epilogues,
-                                  generator_epilogues)
-    g_layers, d_layers = cfg.layers
-    groups = [("g", g_layers, generator_epilogues(g_layers))]
+def _zoo_keys(cfg, batch: int, *, generator_only: bool = False,
+              dtype: str = "float32") -> list[tuple[str, PlanKey]]:
+    """("g/<name>" | "d/<name>", PlanKey) per layer of a ``GanConfig``
+    — derived from :class:`~repro.program.ProgramSpec`, the single
+    owner of the layer/epilogue walk, so tuner keys and program
+    dispatches agree by construction."""
+    from repro.program import ProgramSpec
+    roles = [("g", "generator")]
     if not generator_only:
-        groups.append(("d", d_layers, discriminator_epilogues(d_layers)))
-    return groups
+        roles.append(("d", "discriminator"))
+    out = []
+    for prefix, role in roles:
+        # the heuristic policy keeps spec construction planner-free —
+        # only the geometry/epilogue records matter for the keys
+        spec = ProgramSpec.build(cfg, batch, role,
+                                 policy=DataflowPolicy(), dtype=dtype)
+        out.extend((f"{prefix}/{name}", key)
+                   for name, key in spec.plan_keys())
+    return out
 
 
 def warm_gan_plans(cfg, batch: int, planner: Planner | None = None, *,
@@ -74,13 +85,10 @@ def warm_gan_plans(cfg, batch: int, planner: Planner | None = None, *,
     if planner is None:
         from repro.tune import get_planner
         planner = get_planner()
-    plans: dict[str, Plan] = {}
-    for prefix, layers, eps in _gan_layer_groups(
-            cfg, generator_only=generator_only):
-        for name, key in layer_plan_keys(layers, batch, dtype=dtype,
-                                         epilogues=eps):
-            plans[f"{prefix}/{name}"] = planner.plan(key, measure=measure)
-    return plans
+    return {name: planner.plan(key, measure=measure)
+            for name, key in _zoo_keys(cfg, batch,
+                                       generator_only=generator_only,
+                                       dtype=dtype)}
 
 
 def _time_generator_pair(cfg, params, z, policies, *, warmup: int,
@@ -119,12 +127,12 @@ def tune_model_zoo(models: Sequence[str], planner: Planner, *,
         cfg = GanConfig(name=name, channel_scale=channel_scale)
         meas0 = planner.measurements
         plans = warm_gan_plans(cfg, batch, planner)
+        keys = dict(_zoo_keys(cfg, batch))
         layer_rows = {}
         tuned_us = heur_us = 0.0
         complete = True
         for lname, plan in plans.items():
-            heur = planner.heuristic_plan(
-                next(k for n, k in _all_keys(cfg, batch) if n == lname))
+            heur = planner.heuristic_plan(keys[lname])
             row = {"backend": plan.backend,
                    "blocks": list(plan.blocks) if plan.blocks else None,
                    "source": plan.source,
@@ -167,9 +175,3 @@ def tune_model_zoo(models: Sequence[str], planner: Planner, *,
                 f"({row['measurements']} measurements)")
         out[name] = row
     return out
-
-
-def _all_keys(cfg, batch):
-    return [(f"{prefix}/{n}", k)
-            for prefix, layers, eps in _gan_layer_groups(cfg)
-            for n, k in layer_plan_keys(layers, batch, epilogues=eps)]

@@ -1,4 +1,5 @@
-"""GAN serving engine: fixed-batch jitting, tail slicing, determinism."""
+"""GAN serving engine: program-backed execution, remainder buffering,
+determinism."""
 
 import numpy as np
 import jax
@@ -17,34 +18,65 @@ def test_generate_shapes_and_batching():
     srv = _server(batch_size=2)
     imgs = srv.generate(3)
     assert imgs.shape == (3, 64, 64, 3)
-    assert srv.batches_served == 2  # 3 images → two 2-batches, tail sliced
+    assert srv.batches_served == 2  # 3 images → two 2-batches
+    assert srv.samples_buffered == 1  # tail sample carried, not dropped
 
 
-def test_sample_accounting():
-    """Discarded tail samples are real generator compute; the counters
-    must account for every sample produced."""
+def test_sample_accounting_with_remainder_buffer():
+    """Tail samples beyond n are real generator compute: they are
+    buffered for the next call, never discarded, and the counters
+    account for every sample produced."""
     srv = _server(batch_size=4)
-    srv.generate(3)              # one batch: 3 served, 1 discarded
-    assert (srv.samples_served, srv.samples_discarded) == (3, 1)
-    srv.generate(8)              # two full batches: no discards
-    assert (srv.samples_served, srv.samples_discarded) == (11, 1)
-    srv.generate(5)              # 4 + 1 of 4 → 3 discarded
-    assert (srv.samples_served, srv.samples_discarded) == (16, 4)
-    assert srv.batches_served == 5
+
+    srv.generate(3)              # one batch: 3 served, 1 buffered
+    assert (srv.samples_served, srv.samples_buffered,
+            srv.samples_discarded) == (3, 1, 0)
+    assert srv.batches_served == 1
+
+    srv.generate(8)              # 1 from buffer + two batches, 1 left
+    assert (srv.samples_served, srv.samples_buffered,
+            srv.samples_discarded) == (11, 1, 0)
+    assert srv.batches_served == 3
+
+    srv.generate(5)              # 1 from buffer + one batch, exact
+    assert (srv.samples_served, srv.samples_buffered,
+            srv.samples_discarded) == (16, 0, 0)
+    assert srv.batches_served == 4
+
+    # invariant: every produced sample is served, buffered, or discarded
+    assert srv.samples_served + srv.samples_buffered + \
+        srv.samples_discarded == srv.batches_served * 4
     r = repr(srv)
-    assert "served=16" in r and "discarded=4" in r
+    assert "served=16" in r and "buffered=0" in r and "discarded=0" in r
+
+
+def test_buffered_samples_serve_in_order():
+    """The carried remainder is exactly the tail of the last batch: two
+    servers with the same seed produce the same stream regardless of the
+    call pattern chunking."""
+    a = _server(batch_size=4, seed=5)
+    b = _server(batch_size=4, seed=5)
+    chunked = np.concatenate([a.generate(3), a.generate(3),
+                              a.generate(2)])
+    whole = b.generate(8)
+    np.testing.assert_array_equal(chunked, whole)
+    assert a.batches_served == b.batches_served == 2
 
 
 def test_repr_exposes_resolved_policy():
     srv = _server()
     # CPU host, pinned-by-legacy-config policy → polyphase
     assert "policy=polyphase" in repr(srv)
+    # the frozen program is inspectable layer by layer
+    desc = srv.describe()
+    assert "program dcgan/generator" in desc
+    assert desc.count("-> polyphase") == 4
 
 
-def test_auto_policy_warms_plans_on_construction():
-    """A backend='auto' server resolves a plan for every generator layer
-    before its first jit trace, and a warm planner means the warmup does
-    zero measurements."""
+def test_auto_policy_builds_measured_program_on_construction():
+    """A backend='auto' server resolves (measuring) a plan for every
+    generator layer at program build — before the first jit trace — and
+    a warm planner means a second server measures nothing."""
     from repro.tune import Planner, set_planner
 
     planner = set_planner(Planner(repeats=1))
@@ -54,8 +86,10 @@ def test_auto_policy_warms_plans_on_construction():
         g, _ = init_gan(cfg, jax.random.PRNGKey(0))
         srv = GanServer(cfg, g, batch_size=2)
         g_layers, _ = cfg.layers
-        assert len(srv.plans) == len(g_layers)
-        assert srv.plans and planner.measurements > 0
+        assert len(srv.program.spec.layers) == len(g_layers)
+        assert all(le.source == "tuned"
+                   for le in srv.program.spec.layers)
+        assert planner.measurements > 0
         assert repr(srv).startswith("GanServer(model='dcgan'")
         assert "auto(" in repr(srv)
         imgs = srv.generate(2)
@@ -65,14 +99,15 @@ def test_auto_policy_warms_plans_on_construction():
         meas = planner.measurements
         srv2 = GanServer(cfg, g, batch_size=2)
         assert planner.measurements == meas
-        assert len(srv2.plans) == len(g_layers)
+        assert len(srv2.program.spec.layers) == len(g_layers)
     finally:
         set_planner(None)
 
 
 def test_auto_matches_pinned_numerics():
-    """Acceptance: the auto policy server serves bit-identical images to
-    the concrete backend its plans name."""
+    """Acceptance: the auto-policy server's frozen program serves
+    bit-identical images to the concrete backend its plans name."""
+    from repro.models.gan import generator_epilogues
     from repro.tune import Plan, Planner, set_planner
     from repro.tune.zoo import layer_plan_keys
 
@@ -81,16 +116,33 @@ def test_auto_matches_pinned_numerics():
     planner = set_planner(Planner())
     try:
         g_layers, _ = cfg.layers
-        for _, key in layer_plan_keys(g_layers, batch=2):
+        for _, key in layer_plan_keys(
+                g_layers, batch=2,
+                epilogues=generator_epilogues(g_layers)):
             planner.put(key, Plan(backend="zero-insert"))
-        auto_imgs = GanServer(cfg, g, batch_size=2, seed=3).generate(2)
+        srv = GanServer(cfg, g, batch_size=2, seed=3)
+        assert planner.measurements == 0   # plans were warm
+        auto_imgs = srv.generate(2)
     finally:
         set_planner(None)
     cfg_z = GanConfig(name="dcgan", channel_scale=0.03125,
                       backend="zero-insert")
     pinned_imgs = GanServer(cfg_z, g, batch_size=2, seed=3).generate(2)
-    np.testing.assert_allclose(auto_imgs, pinned_imgs, atol=1e-5,
-                               rtol=1e-5)
+    np.testing.assert_array_equal(auto_imgs, pinned_imgs)
+
+
+def test_exported_program_serves():
+    """ProgramSpec JSON → Program → GanServer(program=...): the
+    ship-a-tuned-program flow."""
+    from repro.program import Program, ProgramSpec
+
+    cfg = GanConfig(name="dcgan", channel_scale=0.03125)
+    g, _ = init_gan(cfg, jax.random.PRNGKey(0))
+    ref = GanServer(cfg, g, batch_size=2, seed=3)
+    spec = ProgramSpec.from_json(ref.program.spec.to_json())
+    srv = GanServer(cfg, g, batch_size=2, seed=3,
+                    program=Program(spec, differentiable=False))
+    np.testing.assert_array_equal(srv.generate(3), ref.generate(3))
 
 
 def test_generate_deterministic_per_seed():
