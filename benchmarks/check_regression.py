@@ -53,12 +53,16 @@ import pathlib
 import sys
 
 # (section, per-model metric, direction) the gate tracks: "lower" =
-# wall-clock (bigger is a regression), "higher" = ratio (smaller is).
+# wall-clock (bigger is a regression), "higher" = ratio (smaller is),
+# "cap:<N>" = absolute ceiling (fresh value above N fails, baseline
+# value irrelevant — for metrics like a percentage overhead where
+# gating relative to a near-zero baseline would be meaningless).
 GATED_METRICS = (
     ("dataflow", "polyphase_us", "lower"),
     ("dataflow", "wallclock_speedup", "higher"),
     ("dataflow", "fused_us", "lower"),
     ("dataflow", "program_us", "lower"),
+    ("dataflow", "obs_overhead_pct", "cap:2.0"),
     ("tune", "generator_tuned_us", "lower"),
 )
 DEFAULT_THRESHOLD = 0.25
@@ -82,7 +86,10 @@ def extract(dataflow: dict, tune: dict) -> dict:
     for section, metric, _ in GATED_METRICS:
         for model, row in sources[section].items():
             value = row.get(metric)
-            if isinstance(value, (int, float)) and value > 0:
+            # >= 0: cap metrics (e.g. a clamped overhead pct) are
+            # legitimately zero; ratio/wall-clock rows never are
+            if isinstance(value, (int, float)) and value >= 0 and \
+                    (value > 0 or metric.endswith("_pct")):
                 fresh[section].setdefault(model, {})[metric] = value
     return fresh
 
@@ -102,6 +109,22 @@ def compare(baseline: dict, fresh: dict, threshold: float
             new = fresh_models.get(model, {}).get(metric)
             if base is None and new is None:
                 continue    # metric not tracked for this model
+            if direction.startswith("cap:"):
+                # absolute ceiling: the fresh value alone decides
+                cap = float(direction.split(":", 1)[1])
+                if new is None:
+                    failures.append(f"{name}: present in baseline but "
+                                    f"missing from the fresh artifacts")
+                    lines.append(f"| {name} | cap {cap:,.2f} | - | - | "
+                                 f"MISSING |")
+                    continue
+                gate = "FAIL" if new > cap else "ok"
+                if new > cap:
+                    failures.append(f"{name}: {new:,.2f} exceeds the "
+                                    f"absolute cap {cap:,.2f}")
+                lines.append(f"| {name} | cap {cap:,.2f} | {new:,.2f} | "
+                             f"- | {gate} |")
+                continue
             if base is None:
                 lines.append(f"| {name} | - | {new:,.2f} | new | - |")
                 continue

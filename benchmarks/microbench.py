@@ -184,6 +184,74 @@ def bench_program(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
     return rows
 
 
+def bench_obs_overhead(models=("dcgan",), batch=2,
+                       channel_scale=0.25, repeats=5,
+                       backend="polyphase"):
+    """Cost of the obs instrumentation on the ``Program.apply`` hot
+    path: the instrumented wrapper vs the raw jitted callable
+    (``prog._apply``), timed interleaved so both sides share every noise
+    window and reduced with the per-thunk *minimum* — the wrapper delta
+    is sub-microsecond on a millisecond-scale op, so a median is still
+    noise-dominated on a contended host while the min (noise is
+    strictly additive) recovers both sides' intrinsic time.  Only the
+    *fastest* program is measured by default: the wrapper delta is a
+    fixed per-call cost, so the quickest apply gives the tightest
+    relative bound, while on a hundreds-of-ms program the same delta is
+    thousands of times smaller than run-to-run drift — that row could
+    only ever flake, never inform.
+
+    Emits ``micro/<model>/obs_overhead_pct`` — the **disabled**-tracing
+    wrapper cost, clamped at 0 and gated in CI against an absolute cap
+    (observability must stay near-free when off) — plus the
+    informational ``obs_enabled_overhead_pct`` (tracing on, in-memory
+    sink: the price of actually recording spans)."""
+    from repro import obs
+    from repro.models.gan import GanConfig, init_gan
+    from repro.program import Program
+    from repro.tune.measure import time_interleaved
+
+    rows = []
+    print(f"\n== microbench: obs overhead on program apply ({backend}, "
+          f"batch={batch}, channels×{channel_scale}) ==")
+    was_enabled, prior_sink = obs.is_enabled(), obs.get_sink()
+    rounds = max(repeats * 3, 15)   # min over many rounds: noise floor
+    try:
+        for name in models:
+            cfg = GanConfig(name=name, channel_scale=channel_scale,
+                            backend=backend)
+            g_params, _ = init_gan(cfg, jax.random.PRNGKey(0))
+            z = jnp.asarray(np.random.default_rng(0).normal(
+                size=(batch, cfg.z_dim)), jnp.float32)
+            prog = Program.build(cfg, batch, "generator")
+            thunks = [lambda: prog.apply(g_params, z),
+                      lambda: prog._apply(g_params, z)]
+            obs.disable()
+            t_off, t_raw = time_interleaved(thunks, warmup=1,
+                                            repeats=rounds, reduce="min")
+            obs.enable()    # fresh in-memory sink
+            t_on, t_raw_on = time_interleaved(thunks, warmup=1,
+                                              repeats=rounds,
+                                              reduce="min")
+            obs.disable()
+            off_pct = max(0.0, (t_off / t_raw - 1.0) * 100.0) \
+                if t_raw else 0.0
+            on_pct = max(0.0, (t_on / t_raw_on - 1.0) * 100.0) \
+                if t_raw_on else 0.0
+            rows.append((f"micro/{name}/obs_overhead_pct", off_pct,
+                         "apply wrapper vs raw callable, tracing off; "
+                         "gated: absolute cap"))
+            rows.append((f"micro/{name}/obs_enabled_overhead_pct", on_pct,
+                         "tracing on, memory sink (informational)"))
+            print(f"  {name:8s} raw={t_raw*1e6:8.1f}us  "
+                  f"disabled=+{off_pct:4.2f}%  enabled=+{on_pct:4.2f}%")
+    finally:
+        if was_enabled:
+            obs.enable(prior_sink)
+        else:
+            obs.disable()
+    return rows
+
+
 def bench_kernel_interpret():
     """Sanity timing of the Pallas kernel in interpret mode — both the
     planar and the volumetric (3-D) entry points (correctness path; not
@@ -217,6 +285,10 @@ def run_all(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
     rows += bench_fused_epilogue(models, batch, channel_scale,
                                  repeats=repeats)
     rows += bench_program(models, batch, channel_scale, repeats=repeats)
+    # first model only: the quickest apply bounds the fixed wrapper
+    # cost tightest (see bench_obs_overhead)
+    rows += bench_obs_overhead(models[:1], batch, channel_scale,
+                               repeats=repeats)
     rows += bench_kernel_interpret()
     return rows
 

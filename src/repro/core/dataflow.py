@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.scheduler import PhaseSchedule, make_schedule
 from repro.core.tconv import tconv_ganax, tconv_zero_insert
 
@@ -327,6 +328,12 @@ def uop_cache_info() -> dict[str, int]:
 def uop_cache_clear() -> None:
     compile_uops.cache_clear()
     compile_conv_uops.cache_clear()
+
+
+# Observers (the train loop's end-of-run stats, ``obs.collect``) read
+# the μop-cache efficiency through the obs registry instead of poking
+# this module's privates.
+_obs.register_collector("dataflow.uop_cache", uop_cache_info)
 
 
 # ---------------------------------------------------------------------------
@@ -855,11 +862,32 @@ def resolve_execution(policy: DataflowPolicy, kind: str,
     raising.  ``measure=True`` additionally tunes plan misses (never do
     this from dispatch: it may run inside a ``jit`` trace, where timing
     is meaningless — ahead-of-time builders only)."""
+    with _obs.trace("dataflow.resolve", kind=kind) as sp:
+        res, reasons = _resolve_execution(
+            policy, kind, in_spatial, kernel, strides, paddings, cin,
+            cout, batch=batch, dtype=dtype, epilogue=epilogue,
+            planner=planner, measure=measure)
+        sp.set(backend=res.backend, source=res.source)
+    _obs.counter("dataflow.resolve").inc()
+    _obs.counter(f"dataflow.resolve.{res.source}").inc()
+    for reason in reasons:
+        _obs.counter(f"dataflow.resolve.{reason}").inc()
+    return res
+
+
+def _resolve_execution(policy, kind, in_spatial, kernel, strides,
+                       paddings, cin, cout, *, batch, dtype, epilogue,
+                       planner, measure
+                       ) -> tuple[Resolution, list[str]]:
+    """Uninstrumented :func:`resolve_execution` body; the second return
+    value lists the plan-cache outcomes (``plan_hit``/``plan_miss``/
+    ``plan_measured``) and degradations (``stale_plan``/
+    ``stale_blocks``) that explain the provenance."""
     nd = len(in_spatial)
     if policy.backend != "auto":
         source = "heuristic" if policy.backend is None \
             and policy.interpret is None else "pinned"
-        return Resolution(policy.resolve(nd), None, source)
+        return Resolution(policy.resolve(nd), None, source), []
     policy.resolve(nd)  # validates the interpret combination
     from repro.tune import get_planner
     from repro.tune.planner import PlanKey
@@ -875,8 +903,17 @@ def resolve_execution(policy: DataflowPolicy, kind: str,
                   dtype=str(jnp.dtype(dtype)),
                   platform=jax.default_backend(),
                   **ep.key_fields())
-    plan = planner.plan(key, measure=True) if measure \
-        else planner.lookup(key)
+    # Plan-cache outcome classification must not issue extra planner
+    # calls — test_program pins exact ``planner.lookups`` counts — so
+    # hit/miss is inferred from the measurement delta / lookup result.
+    if measure:
+        measured_before = planner.measurements
+        plan = planner.plan(key, measure=True)
+        reasons = ["plan_measured" if planner.measurements
+                   > measured_before else "plan_hit"]
+    else:
+        plan = planner.lookup(key)
+        reasons = ["plan_hit" if plan is not None else "plan_miss"]
     if plan is not None and plan.backend in _BACKENDS and \
             _BACKENDS[plan.backend].supports(nd):
         blocks = plan.blocks if plan.backend.startswith("pallas") else None
@@ -885,10 +922,14 @@ def resolve_execution(policy: DataflowPolicy, kind: str,
                 key.paddings, cin, cout, blocks):
             blocks = None   # stale blocks (geometry drift): keep the
             # planned backend, fall back to its default tile shapes
+            reasons.append("stale_blocks")
         source = "tuned" if plan.source == "measured" else "heuristic"
-        return Resolution(plan.backend, blocks, source, plan.measured_us)
+        return Resolution(plan.backend, blocks, source,
+                          plan.measured_us), reasons
+    if plan is not None:
+        reasons.append("stale_plan")    # unknown backend / bad rank
     heuristic = dataclasses.replace(policy, backend=None).resolve(nd)
-    return Resolution(heuristic, None, "heuristic")
+    return Resolution(heuristic, None, "heuristic"), reasons
 
 
 def _planned_dispatch(policy: DataflowPolicy, transposed: bool, x, w,

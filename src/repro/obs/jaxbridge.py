@@ -1,0 +1,59 @@
+"""Opt-in bridge from the obs tracer to the JAX/XLA profiler.
+
+``obs.profile(outdir)`` wraps ``jax.profiler.start_trace`` /
+``stop_trace`` around a code region (the resulting TensorBoard/Perfetto
+dump shows the *device*-side timeline the host-side obs spans can't
+see), and emits a matching ``obs.profile`` span so the two traces can
+be aligned.  ``obs.annotate(name)`` returns a
+``jax.profiler.TraceAnnotation`` naming a region inside the XLA trace.
+
+Both degrade to host-side-only behavior when the profiler is
+unavailable (no jax, or a backend without profiling support): the obs
+span still records, the device trace is skipped with a warning attr —
+observability must never take the workload down.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs import tracer as _tracer
+
+__all__ = ["profile", "annotate"]
+
+
+@contextlib.contextmanager
+def profile(outdir):
+    """Context manager: capture a JAX profiler trace of the region into
+    ``outdir`` (viewable in TensorBoard / Perfetto), plus an
+    ``obs.profile`` span on the obs timeline."""
+    started = False
+    err = None
+    try:
+        import jax
+        jax.profiler.start_trace(str(outdir))
+        started = True
+    except Exception as e:    # no jax / unsupported backend
+        err = f"{type(e).__name__}: {e}"
+    span = _tracer.trace("obs.profile", outdir=str(outdir),
+                         device_trace=started)
+    if err is not None:
+        span.attrs["error"] = err
+    with span:
+        try:
+            yield
+        finally:
+            if started:
+                import jax
+                jax.profiler.stop_trace()
+
+
+def annotate(name: str):
+    """A named region on the device-side profiler timeline
+    (``jax.profiler.TraceAnnotation``); a no-op context manager when
+    the profiler is unavailable."""
+    try:
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:
+        return contextlib.nullcontext()

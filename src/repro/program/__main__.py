@@ -52,10 +52,18 @@ def main(argv=None) -> int:
                     help="load a program file instead of resolving "
                          "(falls back to fresh resolution when "
                          "corrupt/stale)")
+    ap.add_argument("--stats", action="store_true",
+                    help="after describing, print the resolution "
+                         "metrics this invocation produced (plan-cache "
+                         "hits/misses, provenance breakdown, "
+                         "degradations)")
     args = ap.parse_args(argv)
 
+    from repro import obs
     from repro.models.gan import GanConfig
     from repro.program import Program, ProgramSpec, load_or_build
+
+    counters0 = dict(obs.snapshot()["counters"]) if args.stats else {}
 
     planner = None
     if args.plans:
@@ -101,6 +109,18 @@ def main(argv=None) -> int:
     # a loadable spec is also buildable into a runtime object; keep the
     # smoke honest by exercising the wrap (no trace, no arrays)
     Program(spec)
+    if args.stats:
+        counters = obs.snapshot()["counters"]
+        deltas = {k: v - counters0.get(k, 0)
+                  for k, v in sorted(counters.items())
+                  if v - counters0.get(k, 0)
+                  and (k.startswith("dataflow.resolve")
+                       or k.startswith("program."))}
+        print("\nresolution stats:")
+        for name, v in deltas.items():
+            print(f"  {name:36s} {v}")
+        if not deltas:
+            print("  (none)")
     return 0
 
 

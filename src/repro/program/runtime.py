@@ -16,6 +16,7 @@ import logging
 
 import jax
 
+from repro import obs as _obs
 from repro.core.dataflow import DataflowPolicy
 from repro.core.dataflow import conv as df_conv
 from repro.core.dataflow import tconv as df_tconv
@@ -46,7 +47,12 @@ class Program:
         self.traces = 0
 
         def _traced(params, x):
+            # Runs once per input shape (trace time, not per call) —
+            # cheap enough to always count, visible in ``--stats``.
             self.traces += 1
+            _obs.counter("program.traces").inc()
+            if self.traces > 1:
+                _obs.counter("program.retraces").inc()
             return self.forward(params, x)
         self._apply = jax.jit(_traced)
 
@@ -77,16 +83,36 @@ class Program:
             w = params[le.w_param]
             b = params[le.b_param] if le.bias else None
             op = df_tconv if le.kind == "tconv" else df_conv
-            x = op(x, w, le.strides, le.paddings, policy=policy,
-                   blocks=le.blocks, bias=b, epilogue=le.epilogue)
+            # Host-side span: under jit this records *trace* time (how
+            # long building this layer's computation took), exactly once
+            # per executable — it never enters the jaxpr.
+            with _obs.trace("program.layer", layer=le.name, kind=le.kind,
+                            backend=le.backend, source=le.source,
+                            measured_us=le.measured_us):
+                x = op(x, w, le.strides, le.paddings, policy=policy,
+                       blocks=le.blocks, bias=b, epilogue=le.epilogue)
         if spec.role == "discriminator":
             x = x.reshape(batch, -1).mean(axis=-1)
         return x
 
     def apply(self, params, x):
         """The jitted executable: one trace per input shape, then the
-        cached computation — serving's hot path."""
-        return self._apply(params, x)
+        cached computation — serving's hot path.
+
+        The disabled-tracing path is a single boolean check away from
+        the raw jitted callable (the microbench gate pins its cost on
+        ``program_us`` under 2%); with tracing on, each call gets a
+        ``program.apply`` span whose ``traced`` attr flags the calls
+        that paid trace+compile time."""
+        if not _obs.is_enabled():
+            return self._apply(params, x)
+        traces_before = self.traces
+        with _obs.trace("program.apply", model=self.spec.model,
+                        role=self.spec.role,
+                        batch=int(x.shape[0])) as sp:
+            out = self._apply(params, x)
+            sp.set(traced=self.traces > traces_before)
+        return out
 
     # -- passthroughs -------------------------------------------------------
     def describe(self) -> str:

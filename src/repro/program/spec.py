@@ -28,6 +28,7 @@ import os
 
 import jax
 
+from repro import obs as _obs
 from repro.core.dataflow import (DataflowPolicy, Epilogue,
                                  available_backends, backend_supports,
                                  blocks_valid, resolve_execution)
@@ -222,23 +223,28 @@ class ProgramSpec:
             layers, prefix = d_layers, "c"
             epilogues = discriminator_epilogues(d_layers)
         records = []
-        for i, (l, ep) in enumerate(zip(layers, epilogues)):
-            kind = "tconv" if l.transposed else "conv"
-            res = resolve_execution(
-                policy, kind, l.in_spatial, l.kernel, l.strides,
-                l.paddings, l.cin, l.cout, batch=batch, dtype=dtype,
-                epilogue=ep, planner=planner, measure=measure)
-            records.append(LayerExec(
-                name=l.name, kind=kind,
-                in_spatial=tuple(l.in_spatial), kernel=tuple(l.kernel),
-                strides=tuple(l.strides), paddings=tuple(l.paddings),
-                cin=int(l.cin), cout=int(l.cout),
-                w_param=f"{prefix}{i}_w",
-                b_param=f"{prefix}{i}_b" if ep.bias else None,
-                bias=ep.bias, activation=ep.activation,
-                leaky_slope=ep.leaky_slope,
-                backend=res.backend, blocks=res.blocks,
-                source=res.source, measured_us=res.measured_us))
+        with _obs.trace("program.build", model=cfg.name, role=role,
+                        batch=int(batch), measure=bool(measure),
+                        layers=len(layers)):
+            for i, (l, ep) in enumerate(zip(layers, epilogues)):
+                kind = "tconv" if l.transposed else "conv"
+                res = resolve_execution(
+                    policy, kind, l.in_spatial, l.kernel, l.strides,
+                    l.paddings, l.cin, l.cout, batch=batch, dtype=dtype,
+                    epilogue=ep, planner=planner, measure=measure)
+                records.append(LayerExec(
+                    name=l.name, kind=kind,
+                    in_spatial=tuple(l.in_spatial),
+                    kernel=tuple(l.kernel),
+                    strides=tuple(l.strides), paddings=tuple(l.paddings),
+                    cin=int(l.cin), cout=int(l.cout),
+                    w_param=f"{prefix}{i}_w",
+                    b_param=f"{prefix}{i}_b" if ep.bias else None,
+                    bias=ep.bias, activation=ep.activation,
+                    leaky_slope=ep.leaky_slope,
+                    backend=res.backend, blocks=res.blocks,
+                    source=res.source, measured_us=res.measured_us))
+        _obs.counter("program.builds").inc()
         return cls(model=cfg.name, role=role, batch=int(batch),
                    z_dim=int(cfg.z_dim) if role == "generator" else None,
                    channel_scale=float(cfg.channel_scale), dtype=dtype,

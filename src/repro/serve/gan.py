@@ -28,14 +28,27 @@ across servers with distinct seeds).
 
 from __future__ import annotations
 
+import itertools
+import time
+
 import jax
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.dataflow import DataflowPolicy
 from repro.models.gan import GanConfig
 from repro.program import Program, ProgramSpec
 
 __all__ = ["GanServer"]
+
+# Distinguishes the metrics of multiple servers in one process (same
+# model, different seeds/batch sizes) — the label, not the metric name,
+# carries the instance identity.
+_SERVER_SEQ = itertools.count()
+
+# Batch occupancy is a fraction of batch_size in (0, 1]; latency buckets
+# make no sense for it.
+_OCCUPANCY_BOUNDS = tuple(i / 10 for i in range(1, 11))
 
 
 class GanServer:
@@ -51,9 +64,21 @@ class GanServer:
         self.batch_size = int(batch_size)
         self.policy = policy or cfg.policy
         self.key = jax.random.PRNGKey(seed)
-        self.batches_served = 0
-        self.samples_served = 0
-        self.samples_discarded = 0
+        # Accounting lives on the obs registry (one labeled metric set
+        # per server instance); the old integer attributes survive as
+        # read-only properties over these, so
+        # ``served + buffered + discarded == batches × batch_size``
+        # is now an invariant of registry state.
+        self.server_id = f"{cfg.name}#{next(_SERVER_SEQ)}"
+        labels = {"server": self.server_id}
+        self._m_batches = _obs.counter("serve.batches", **labels)
+        self._m_served = _obs.counter("serve.samples_served", **labels)
+        self._m_discarded = _obs.counter("serve.samples_discarded",
+                                         **labels)
+        self._m_buffered = _obs.gauge("serve.samples_buffered", **labels)
+        self._m_request_us = _obs.histogram("serve.request_us", **labels)
+        self._m_occupancy = _obs.histogram(
+            "serve.batch_occupancy", bounds=_OCCUPANCY_BOUNDS, **labels)
         self._spare: np.ndarray | None = None   # carried tail samples
         if program is not None:
             if program.spec.role != "generator":
@@ -82,9 +107,26 @@ class GanServer:
                 measure=warm_plans, differentiable=False)
         self._generate = self.program.apply
 
+    # -- accounting (registry-backed; attribute API preserved) --------------
+    @property
+    def batches_served(self) -> int:
+        return self._m_batches.value
+
+    @property
+    def samples_served(self) -> int:
+        return self._m_served.value
+
+    @property
+    def samples_discarded(self) -> int:
+        return self._m_discarded.value
+
     @property
     def samples_buffered(self) -> int:
         return 0 if self._spare is None else len(self._spare)
+
+    def _set_spare(self, spare: np.ndarray | None) -> None:
+        self._spare = spare if spare is not None and len(spare) else None
+        self._m_buffered.set(self.samples_buffered)
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
@@ -96,27 +138,35 @@ class GanServer:
         never discarded."""
         if int(n) <= 0:
             raise ValueError(f"n must be positive, got {n}")
-        outs = []
-        remaining = int(n)
-        if self._spare is not None:
-            take = min(len(self._spare), remaining)
-            outs.append(self._spare[:take])
-            spare = self._spare[take:]
-            self._spare = spare if len(spare) else None
-            self.samples_served += take
-            remaining -= take
-        while remaining > 0:
-            z = jax.random.normal(self._next_key(),
-                                  (self.batch_size, self.cfg.z_dim))
-            img = np.asarray(self._generate(self.params, z))
-            self.batches_served += 1
-            take = min(self.batch_size, remaining)
-            self.samples_served += take
-            remaining -= take
-            outs.append(img[:take])
-            if take < self.batch_size:
-                self._spare = img[take:]
-        return np.concatenate(outs, axis=0)
+        t0 = time.perf_counter()
+        with _obs.trace("serve.generate", server=self.server_id,
+                        n=int(n)) as sp:
+            outs = []
+            remaining = int(n)
+            batches = 0
+            if self._spare is not None:
+                take = min(len(self._spare), remaining)
+                outs.append(self._spare[:take])
+                self._set_spare(self._spare[take:])
+                self._m_served.inc(take)
+                remaining -= take
+            while remaining > 0:
+                z = jax.random.normal(self._next_key(),
+                                      (self.batch_size, self.cfg.z_dim))
+                img = np.asarray(self._generate(self.params, z))
+                self._m_batches.inc()
+                batches += 1
+                take = min(self.batch_size, remaining)
+                self._m_served.inc(take)
+                self._m_occupancy.observe(take / self.batch_size)
+                remaining -= take
+                outs.append(img[:take])
+                if take < self.batch_size:
+                    self._set_spare(img[take:])
+            out = np.concatenate(outs, axis=0)
+            sp.set(batches=batches, buffered=self.samples_buffered)
+        self._m_request_us.observe((time.perf_counter() - t0) * 1e6)
+        return out
 
     def describe(self) -> str:
         """The server's frozen execution: the program's per-layer

@@ -24,6 +24,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro import obs as _obs
 from repro.train import checkpoint as ckpt
 
 __all__ = ["LoopConfig", "TrainLoop", "InjectedFailure",
@@ -84,17 +85,15 @@ class InjectedFailure(RuntimeError):
     pass
 
 
-def _uop_cache_info():
-    from repro.core.dataflow import uop_cache_info
-    return uop_cache_info()
-
-
-def _tune_stats():
-    """Autotuning planner counters, or None when no planner exists (the
-    observer must not create one as a side effect)."""
-    from repro.tune import get_planner
-    planner = get_planner(create=False)
-    return None if planner is None else planner.stats()
+def _collect_stats() -> dict:
+    """External-subsystem stats through the obs registry's collector
+    hooks — every dict is a fresh copy (``obs.collect``), so a snapshot
+    held across the run never aliases live counter state.  The imports
+    force collector registration (each module registers its own on
+    import); missing subsystems simply don't report."""
+    import repro.core.dataflow  # noqa: F401 — registers dataflow.uop_cache
+    import repro.tune           # noqa: F401 — registers tune.planner
+    return _obs.collect()
 
 
 @dataclasses.dataclass
@@ -145,6 +144,9 @@ class TrainLoop:
         else:
             ckpt.save_async(self.state, self.cfg.ckpt_dir, step)
         self._last_saved_step = step
+        _obs.counter("train.checkpoints").inc()
+        _obs.event("train.checkpoint", step=step,
+                   sync=bool(sync or not self.cfg.async_ckpt))
 
     def _restore_latest(self) -> int:
         ckpt.wait_pending()
@@ -158,6 +160,7 @@ class TrainLoop:
         self.state = ckpt.restore(self.state, self.cfg.ckpt_dir, step,
                                   self.state_shardings)
         self.log(f"[loop] restored checkpoint at step {step}")
+        _obs.event("train.restore", step=step)
         return step
 
     # -- watchdog -----------------------------------------------------------
@@ -167,6 +170,9 @@ class TrainLoop:
             return
         if dt > self.cfg.straggler_factor * self._ewma:
             self.straggler_events.append(step)
+            _obs.counter("train.stragglers").inc()
+            _obs.event("train.straggler", step=step, dt_s=dt,
+                       ewma_s=self._ewma)
             self.log(f"[loop] STRAGGLER step {step}: {dt:.3f}s vs "
                      f"EWMA {self._ewma:.3f}s")
         self._ewma = (1 - self.cfg.ewma_alpha) * self._ewma + \
@@ -175,13 +181,14 @@ class TrainLoop:
     # -- main ---------------------------------------------------------------
     def run(self, start_step: int = 0) -> Any:
         self._install_sigterm()
-        self._uop_cache0 = _uop_cache_info()
-        self._tune_stats0 = _tune_stats()
+        self._stats0 = _collect_stats()
         self._initial_state = self.state  # immutable tree: reference only
+        step_us = _obs.histogram("train.step_us")
         step = start_step
         while step < self.cfg.total_steps:
             if self._preempted:
                 self.log(f"[loop] SIGTERM: checkpointing at {step}, exiting")
+                _obs.event("train.preempt", step=step)
                 self._save(step, sync=True)
                 self._log_uop_cache()
                 return self.state
@@ -189,15 +196,21 @@ class TrainLoop:
                 if self.failure_injector and self.failure_injector(step):
                     raise InjectedFailure(f"injected failure at step {step}")
                 t0 = time.perf_counter()
-                batch = self.batch_fn(step)
-                self.state, metrics = self.train_step(self.state, batch)
-                jax.block_until_ready(
-                    jax.tree.leaves(self.state)[0])
+                with _obs.trace("train.step", step=step):
+                    batch = self.batch_fn(step)
+                    self.state, metrics = self.train_step(self.state,
+                                                          batch)
+                    jax.block_until_ready(
+                        jax.tree.leaves(self.state)[0])
                 dt = time.perf_counter() - t0
+                step_us.observe(dt * 1e6)
+                _obs.counter("train.steps").inc()
                 self._watch(step, dt)
                 if step % self.cfg.log_every == 0:
                     m = {k: float(v) for k, v in metrics.items()
                          if getattr(v, "ndim", 0) == 0}
+                    for k, v in m.items():
+                        _obs.gauge(f"train.{k}").set(v)
                     self.metrics_history.append({"step": step, **m})
                     self.log(f"[loop] step {step} "
                              f"loss={m.get('total_loss', m.get('loss', -1)):.4f} "
@@ -207,6 +220,9 @@ class TrainLoop:
                     self._save(step)
             except InjectedFailure as e:
                 self.restarts += 1
+                _obs.counter("train.failures").inc()
+                _obs.event("train.failure", step=step,
+                           restart=self.restarts)
                 self.log(f"[loop] FAILURE: {e}; restart "
                          f"{self.restarts}/{self.cfg.max_restarts}")
                 if self.restarts > self.cfg.max_restarts:
@@ -224,17 +240,22 @@ class TrainLoop:
     def _log_uop_cache(self):
         """Surface the dataflow μop-cache efficiency over this run:
         replayed/retraced steps should hit the cache, not re-run the
-        scheduler."""
-        info = _uop_cache_info()
-        hits = info["hits"] - self._uop_cache0["hits"]
-        misses = info["misses"] - self._uop_cache0["misses"]
-        if hits or misses:
-            self.log(f"[loop] dataflow μop cache: {hits} hits / "
-                     f"{misses} misses this run "
-                     f"({info['currsize']} geometries cached)")
-        tune = _tune_stats()
+        scheduler.  Both sources are read through ``obs.collect()``
+        (consistent copies), never by poking subsystem privates."""
+        stats = _collect_stats()
+        info = stats.get("dataflow.uop_cache")
+        if info is not None:
+            base = self._stats0.get("dataflow.uop_cache",
+                                    {"hits": 0, "misses": 0})
+            hits = info["hits"] - base["hits"]
+            misses = info["misses"] - base["misses"]
+            if hits or misses:
+                self.log(f"[loop] dataflow μop cache: {hits} hits / "
+                         f"{misses} misses this run "
+                         f"({info['currsize']} geometries cached)")
+        tune = stats.get("tune.planner")
         if tune is not None:
-            base = self._tune_stats0 or \
+            base = self._stats0.get("tune.planner") or \
                 {"lookups": 0, "hits": 0, "measurements": 0}
             lookups = tune["lookups"] - base["lookups"]
             if lookups:

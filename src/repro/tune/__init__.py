@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import os
 
+from repro import obs as _obs
 from repro.tune.candidates import (Candidate, default_backend_pool,
                                    enumerate_candidates)
 from repro.tune.measure import (measure_candidate, synthesize_inputs,
@@ -60,3 +61,13 @@ def set_planner(planner: Planner | None) -> Planner | None:
     global _PLANNER
     _PLANNER = planner
     return planner
+
+
+def _planner_stats():
+    """Process-wide planner counters for ``obs.collect()``, or None when
+    no planner exists (observing must not create one)."""
+    planner = get_planner(create=False)
+    return None if planner is None else planner.stats()
+
+
+_obs.register_collector("tune.planner", _planner_stats)

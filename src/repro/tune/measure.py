@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.dataflow import DataflowPolicy
 from repro.core.dataflow import conv as df_conv
 from repro.core.dataflow import tconv as df_tconv
@@ -67,18 +68,26 @@ def time_fn(fn, *args, warmup: int = 1, repeats: int = 5) -> float:
     return statistics.median(times)
 
 
-def time_interleaved(thunks, *, warmup: int = 1,
-                     repeats: int = 5) -> list[float]:
-    """Median seconds per thunk, with the timed runs interleaved
-    round-robin (A,B,C,A,B,C,…) and the start position rotated per round.
+def time_interleaved(thunks, *, warmup: int = 1, repeats: int = 5,
+                     reduce: str = "median") -> list[float]:
+    """Seconds per thunk, with the timed runs interleaved round-robin
+    (A,B,C,A,B,C,…) and the start position rotated per round.
 
     Interleaving makes competing configurations share every noise
     window, so their *ranking* is meaningful on a contended host where
     back-to-back timing is not; the rotation stops whoever runs first in
-    a round from always paying the cold-cache/page-fault cost."""
+    a round from always paying the cold-cache/page-fault cost.
+
+    ``reduce`` picks the per-thunk aggregate: ``"median"`` (default —
+    representative cost, right for ranking candidates) or ``"min"``
+    (the noise-floor estimate — scheduling noise is strictly additive,
+    so the minimum approaches each thunk's intrinsic time; right when
+    comparing two nearly identical thunks for a sub-percent delta)."""
     for th in thunks:
         for _ in range(warmup):
             jax.block_until_ready(th())
+    if reduce not in ("median", "min"):
+        raise ValueError(f"unknown reduce {reduce!r}")
     times: list[list[float]] = [[] for _ in thunks]
     for r in range(max(1, repeats)):
         for i in range(len(thunks)):
@@ -86,7 +95,8 @@ def time_interleaved(thunks, *, warmup: int = 1,
             t0 = time.perf_counter()
             jax.block_until_ready(thunks[j]())
             times[j].append(time.perf_counter() - t0)
-    return [statistics.median(t) for t in times]
+    agg = min if reduce == "min" else statistics.median
+    return [agg(t) for t in times]
 
 
 def _candidate_fn(key: PlanKey, cand: Candidate):
@@ -117,8 +127,14 @@ def measure_candidate(key: PlanKey, cand: Candidate, *,
     Raises on candidates that fail to compile or run — the planner
     treats that as an infinite cost, not an error."""
     x, w = synthesize_inputs(key)
-    return time_fn(_candidate_fn(key, cand), x, w, warmup=warmup,
-                   repeats=repeats)
+    with _obs.trace("tune.measure", kind=key.kind,
+                    backend=cand.backend, candidates=1):
+        t = time_fn(_candidate_fn(key, cand), x, w, warmup=warmup,
+                    repeats=repeats)
+    _obs.counter("tune.measurements").inc()
+    _obs.event("tune.candidate", backend=cand.backend,
+               blocks=cand.blocks, us=t * 1e6)
+    return t
 
 
 def measure_candidates_interleaved(key: PlanKey,
@@ -132,18 +148,26 @@ def measure_candidates_interleaved(key: PlanKey,
     Candidates that fail to compile/warm up get ``inf`` (and are skipped
     in the timed rounds)."""
     x, w = synthesize_inputs(key)
-    good: list[Candidate] = []
-    thunks = []
-    for cand in cands:
-        try:
-            fn = _candidate_fn(key, cand)
-            for _ in range(max(1, warmup)):   # warm here: failure must
-                jax.block_until_ready(fn(x, w))  # only drop this one
-        except Exception:
-            continue
-        good.append(cand)
-        thunks.append(lambda fn=fn: fn(x, w))
-    out = {c: float("inf") for c in cands}
-    out.update(zip(good, time_interleaved(thunks, warmup=0,
-                                          repeats=repeats)))
+    with _obs.trace("tune.measure", kind=key.kind,
+                    candidates=len(cands)) as sp:
+        good: list[Candidate] = []
+        thunks = []
+        for cand in cands:
+            try:
+                fn = _candidate_fn(key, cand)
+                for _ in range(max(1, warmup)):  # warm here: failure
+                    jax.block_until_ready(fn(x, w))  # drops only this one
+            except Exception:
+                continue
+            good.append(cand)
+            thunks.append(lambda fn=fn: fn(x, w))
+        out = {c: float("inf") for c in cands}
+        timings = time_interleaved(thunks, warmup=0, repeats=repeats)
+        out.update(zip(good, timings))
+        sp.set(measured=len(good), skipped=len(cands) - len(good))
+    _obs.counter("tune.measurements").inc(len(good))
+    _obs.counter("tune.measurements_skipped").inc(len(cands) - len(good))
+    for cand, t in zip(good, timings):
+        _obs.event("tune.candidate", backend=cand.backend,
+                   blocks=cand.blocks, us=t * 1e6)
     return out

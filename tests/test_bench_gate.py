@@ -47,6 +47,37 @@ def test_extract_gated_metrics_only():
         {"dataflow": {}, "tune": {}}
 
 
+def test_cap_metric_gates_absolutely():
+    """obs_overhead_pct gates against its absolute cap — no baseline
+    value needed (relative gating of a near-zero pct is meaningless)."""
+    base = cr.extract(DATAFLOW, TUNE)
+    fresh = json.loads(json.dumps(base))
+    fresh["dataflow"]["dcgan"]["obs_overhead_pct"] = 1.5   # under cap
+    failures, lines = cr.compare(base, fresh, threshold=0.25)
+    assert failures == []
+    assert any("obs_overhead_pct" in ln and "cap" in ln for ln in lines)
+    fresh["dataflow"]["dcgan"]["obs_overhead_pct"] = 3.7   # over cap
+    failures, _ = cr.compare(base, fresh, threshold=0.25)
+    assert len(failures) == 1
+    assert "obs_overhead_pct" in failures[0] and "cap" in failures[0]
+    # a cap metric present in the baseline but absent from the fresh
+    # artifacts is a coverage regression like any other
+    base2 = json.loads(json.dumps(base))
+    base2["dataflow"]["dcgan"]["obs_overhead_pct"] = 0.5
+    failures, _ = cr.compare(base2, base, threshold=0.25)
+    assert any("obs_overhead_pct" in f and "missing" in f
+               for f in failures)
+
+
+def test_extract_accepts_zero_pct():
+    """A clamped overhead of exactly 0 must survive extraction (it is
+    the best possible value); zero wall-clock rows are still dropped as
+    bogus."""
+    df = {"dcgan": {"obs_overhead_pct": 0.0, "polyphase_us": 0.0}}
+    fresh = cr.extract(df, {})
+    assert fresh["dataflow"]["dcgan"] == {"obs_overhead_pct": 0.0}
+
+
 def test_fused_wallclock_regression_gated(tmp_path, capsys):
     """A slowdown confined to the fused path fails the gate."""
     base = cr.extract(DATAFLOW, TUNE)

@@ -216,6 +216,25 @@ print("MEASUREMENTS", p.measurements)
     assert "MEASUREMENTS 0" in out.stdout
 
 
+def test_time_interleaved_reduce_modes(monkeypatch):
+    """``reduce="min"`` takes the per-thunk noise floor, ``"median"``
+    the representative cost; an unknown reducer is rejected.  The clock
+    is stubbed so the samples are exact: with 2 thunks and the rotated
+    round-robin, thunk0 times [10, 30, 20] and thunk1 [100, 200, 300]."""
+    from repro.tune import measure as m
+
+    clock = [0, 10, 10, 110, 110, 310, 310, 340, 340, 360, 360, 660]
+    ticks = iter(clock)
+    monkeypatch.setattr(m.time, "perf_counter", lambda: next(ticks))
+    thunks = [lambda: 1, lambda: 2]
+    assert m.time_interleaved(thunks, warmup=0, repeats=3) == [20.0, 200.0]
+    ticks = iter(clock)
+    assert m.time_interleaved(thunks, warmup=0, repeats=3,
+                              reduce="min") == [10.0, 100.0]
+    with pytest.raises(ValueError):
+        m.time_interleaved(thunks, reduce="mean")
+
+
 # ---------------------------------------------------------------------------
 # Measured tuning behavior.
 # ---------------------------------------------------------------------------
