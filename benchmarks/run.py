@@ -32,10 +32,13 @@ def _dataflow_json(rows) -> dict:
 
 
 def main() -> None:
-    from benchmarks import microbench, paper_figs, roofline
+    from benchmarks import microbench, paper_figs, roofline, traffic
     rows = []
     rows += paper_figs.run_all()
     micro_rows = microbench.run_all()
+    # traffic rows share the micro/<model>/<metric> convention so the
+    # pivot below carries them into BENCH_dataflow.json for the gate
+    micro_rows += traffic.run_all()
     rows += micro_rows
     rows += roofline.run_all()
 

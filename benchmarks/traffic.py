@@ -1,0 +1,181 @@
+"""Poisson-arrival traffic benchmark for the continuous-batching
+serving engine (`repro.serve.gan_engine.GanEngine`).
+
+Producers submit single-sample requests with exponential inter-arrival
+times (a Poisson process) at two offered loads calibrated against the
+engine's measured capacity:
+
+* **low** — ~0.25x capacity: the engine keeps up, so throughput tracks
+  the offered rate and latency is dominated by batch-formation +
+  compute (the unloaded service time);
+* **high** — ~2x capacity: arrivals outpace compute, requests queue,
+  coalescing packs full buckets, and throughput saturates at the
+  engine's capacity (the number that matters).
+
+Capacity is measured in the same run (a timed max-bucket batch on the
+engine's own executable), so the offered rates adapt to the machine —
+the *shape* of the experiment is stable across runner classes even
+though the absolute rows are not.
+
+Emitted rows (``micro/<model>/traffic_*``; the ``BENCH_dataflow.json``
+pivot in ``benchmarks/run.py`` picks them up):
+
+* ``traffic_capacity_sps`` — calibrated samples/sec (informational);
+* ``traffic_{low,high}_offered_rps`` — the Poisson rate actually
+  offered (informational; it is derived from capacity);
+* ``traffic_{low,high}_throughput_sps`` — served samples / wall-clock
+  from first submit to last response.  Gated (higher is better, wide
+  threshold — see ``check_regression.GATED_METRICS``);
+* ``traffic_{low,high}_p50_us`` / ``_p99_us`` — exact per-request
+  submit→response latency percentiles over the run's futures (not
+  histogram-approximated).  Gated (lower is better, wide threshold:
+  tail latency on a shared CI runner is noisy by nature).
+
+Runnable directly::
+
+    PYTHONPATH=src python benchmarks/traffic.py --models dcgan \
+        --requests 30 --buckets 1 2 4
+
+See ``docs/serving.md`` for how to read these rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+import time
+
+import jax
+import numpy as np
+
+DEFAULT_BUCKETS = (1, 2, 4)
+DEFAULT_REQUESTS = 30
+
+
+def _percentile(values, p: float) -> float:
+    """Exact linear-interpolation percentile (numpy convention) — the
+    run holds every individual latency, so no histogram approximation
+    is needed."""
+    return float(np.percentile(np.asarray(values, dtype=np.float64), p))
+
+
+def _calibrate(engine, repeats: int = 4):
+    """(low_rps, high_rps, capacity_sps) for single-sample requests,
+    measured through the engine's own serving path (scheduler, RNG
+    advance, dispatch, device→host copy — the real per-request cost,
+    which eager RNG + scheduling overhead can dominate on small
+    models, so timing the bucket executable alone would overestimate
+    capacity severalfold).
+
+    The sequential rate times back-to-back ``generate(1)`` calls (the
+    no-queue regime: each request rides the smallest bucket).  The
+    coalesced capacity drains a burst of 3x the largest bucket in one
+    go (the backlog regime: full buckets).  "low" offers a quarter of
+    the sequential rate so the engine provably keeps up; "high" offers
+    twice the coalesced capacity so it provably cannot."""
+    engine.generate(1)                      # steady-state, not first-call
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        engine.generate(1)
+    t_seq = (time.perf_counter() - t0) / repeats
+    burst = 3 * engine.buckets[-1]
+    t0 = time.perf_counter()
+    futs = [engine.submit(1) for _ in range(burst)]
+    for f in futs:
+        f.result(timeout=120)
+    capacity = burst / (time.perf_counter() - t0)
+    low = 0.25 / t_seq if t_seq > 0 else float("inf")
+    return low, 2.0 * capacity, capacity
+
+
+def _drive(engine, rate_rps: float, n_requests: int, seed: int):
+    """Offer ``n_requests`` single-sample requests at Poisson rate
+    ``rate_rps``; returns (throughput_sps, sorted latencies_us)."""
+    rng = random.Random(seed)
+    futures = []
+    t0 = time.perf_counter()
+    for _ in range(n_requests):
+        futures.append(engine.submit(1))
+        time.sleep(rng.expovariate(rate_rps))
+    for f in futures:
+        f.result(timeout=120)
+    elapsed = time.perf_counter() - t0
+    lats = sorted(f.latency_us for f in futures)
+    return (n_requests / elapsed if elapsed > 0 else float("inf")), lats
+
+
+def run_traffic(models=("dcgan",), channel_scale=0.25,
+                buckets=DEFAULT_BUCKETS, n_requests=DEFAULT_REQUESTS,
+                seed=0):
+    from repro.models.gan import GanConfig, init_gan
+    from repro.serve.gan_engine import GanEngine
+
+    rows = []
+    print(f"\n== traffic: Poisson arrivals through GanEngine "
+          f"(buckets={list(buckets)}, channels×{channel_scale}, "
+          f"{n_requests} requests/rate) ==")
+    for name in models:
+        cfg = GanConfig(name=name, channel_scale=channel_scale)
+        g_params, _ = init_gan(cfg, jax.random.PRNGKey(0))
+        scenarios = None
+        for i, label in enumerate(("low", "high")):
+            # a fresh engine per rate: each scenario starts from an
+            # empty queue, an empty remainder buffer, and a cold
+            # latency record (the bucket set recompiles, which is the
+            # engine's real startup cost)
+            with GanEngine(cfg, g_params, buckets=buckets,
+                           seed=seed) as eng:
+                if scenarios is None:
+                    low, high, capacity = _calibrate(eng)
+                    scenarios = (low, high)
+                    rows.append((f"micro/{name}/traffic_capacity_sps",
+                                 capacity, "calibrated, informational"))
+                rate = scenarios[i]
+                throughput, lats = _drive(eng, rate, n_requests, seed)
+                assert eng.samples_discarded == 0
+            p50, p99 = _percentile(lats, 50), _percentile(lats, 99)
+            rows.append((f"micro/{name}/traffic_{label}_offered_rps",
+                         rate, "calibrated offer, informational"))
+            rows.append((f"micro/{name}/traffic_{label}_throughput_sps",
+                         throughput, "served/wall-clock, gated wide"))
+            rows.append((f"micro/{name}/traffic_{label}_p50_us", p50,
+                         "exact percentile, gated wide"))
+            rows.append((f"micro/{name}/traffic_{label}_p99_us", p99,
+                         "exact percentile, gated wide"))
+            print(f"  {name:8s} {label:4s} offered={rate:8.1f}rps  "
+                  f"served={throughput:8.1f}sps  p50={p50/1e3:7.2f}ms  "
+                  f"p99={p99/1e3:7.2f}ms")
+    return rows
+
+
+def run_all(models=("dcgan",), channel_scale=0.25,
+            buckets=DEFAULT_BUCKETS, n_requests=DEFAULT_REQUESTS,
+            seed=0):
+    return run_traffic(models, channel_scale, buckets, n_requests, seed)
+
+
+def main(argv=None):
+    from repro.configs.gans import GAN_MODELS
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--models", nargs="+", default=["dcgan"],
+                    choices=sorted(GAN_MODELS))
+    ap.add_argument("--buckets", nargs="+", type=int,
+                    default=list(DEFAULT_BUCKETS))
+    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS,
+                    help="requests per offered-load scenario")
+    ap.add_argument("--channel-scale", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    return run_all(models=tuple(args.models),
+                   channel_scale=args.channel_scale,
+                   buckets=tuple(args.buckets),
+                   n_requests=args.requests, seed=args.seed)
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0,
+                    str(pathlib.Path(__file__).resolve().parent.parent))
+    main()

@@ -48,12 +48,14 @@ from repro.obs.jaxbridge import annotate, profile
 from repro.obs.metrics import (DEFAULT_LATENCY_BOUNDS_US, Counter,
                                Gauge, Histogram, Registry)
 from repro.obs.tracer import (JsonlSink, MemorySink, Span, disable,
-                              enable, event, flush_metrics, get_sink,
-                              is_enabled, registry, trace)
+                              emit_span, enable, event, flush_metrics,
+                              get_sink, is_enabled, now_us, registry,
+                              trace)
 
 __all__ = [
     "trace", "event", "enable", "disable", "is_enabled", "get_sink",
     "flush_metrics", "Span", "MemorySink", "JsonlSink",
+    "now_us", "emit_span",
     "counter", "gauge", "histogram", "snapshot", "collect",
     "register_collector", "registry", "Registry", "Counter", "Gauge",
     "Histogram", "DEFAULT_LATENCY_BOUNDS_US",

@@ -47,7 +47,7 @@ from repro.obs.metrics import Registry
 
 __all__ = ["trace", "event", "enable", "disable", "is_enabled",
            "get_sink", "MemorySink", "JsonlSink", "Span", "registry",
-           "flush_metrics"]
+           "flush_metrics", "now_us", "emit_span"]
 
 _EPOCH_NS = time.perf_counter_ns()
 _EPOCH_WALL_S = time.time()
@@ -212,6 +212,34 @@ def trace(name: str, **attrs) -> Span:
     guarding attribute *formatting* (f-strings, ``describe()`` calls)
     behind :func:`is_enabled` at hot call sites."""
     return Span(name, attrs)
+
+
+def now_us() -> float:
+    """Microseconds on the tracer's process-wide monotonic clock — the
+    timebase of every span/event ``ts_us``.  Use with :func:`emit_span`
+    to stamp region boundaries that close on a different thread."""
+    return _now_us()
+
+
+def emit_span(name: str, start_us: float, end_us: float | None = None,
+              **attrs) -> None:
+    """Emit an already-completed span record directly.
+
+    The context-manager form (:func:`trace`) keeps a *thread-local*
+    span stack, so it cannot express a region whose start and end
+    happen on different threads — e.g. a serving request's
+    submit→response lifetime, opened on a producer thread and closed by
+    the scheduler.  ``emit_span`` takes explicit boundaries instead
+    (``start_us`` from :func:`now_us`; ``end_us`` defaults to now) and
+    writes the span at depth 0 on the emitting thread.  No-op when
+    disabled."""
+    if not _enabled:
+        return
+    if end_us is None:
+        end_us = _now_us()
+    _emit({"type": "span", "name": name, "ts_us": float(start_us),
+           "dur_us": float(end_us) - float(start_us),
+           "tid": threading.get_ident(), "depth": 0, "attrs": attrs})
 
 
 def event(name: str, **attrs) -> None:

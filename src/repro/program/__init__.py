@@ -14,13 +14,17 @@ ahead-of-time specialization:
   one jitted callable ``apply(params, x)`` plus ``describe()``.
 * :func:`load_or_build` — the degrading loader: corrupt / stale /
   mismatched program files fall back to fresh resolution.
+* :func:`build_bucket_programs` — fan one frozen spec out into one
+  executable per batch-size bucket (the continuous-batching serving
+  engine's ahead-of-time bucket set).
 * ``python -m repro.program <model>`` — build + describe (and
   export/load) programs from the command line.
 """
 
-from repro.program.runtime import Program, load_or_build
+from repro.program.runtime import (Program, build_bucket_programs,
+                                   load_or_build)
 from repro.program.spec import (PROGRAM_FORMAT_VERSION, LayerExec,
                                 ProgramSpec)
 
 __all__ = ["LayerExec", "Program", "ProgramSpec", "load_or_build",
-           "PROGRAM_FORMAT_VERSION"]
+           "build_bucket_programs", "PROGRAM_FORMAT_VERSION"]

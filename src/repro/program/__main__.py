@@ -1,5 +1,5 @@
-"""``python -m repro.program`` — build, describe, export, and load
-ahead-of-time compiled GAN programs.
+"""``python -m repro.program`` — build, describe, export, load, and
+account ahead-of-time compiled GAN programs.
 
 Typical use::
 
@@ -7,9 +7,14 @@ Typical use::
     PYTHONPATH=src python -m repro.program dcgan --backend auto \
         --plans plans.json --export dcgan-program.json
     PYTHONPATH=src python -m repro.program dcgan --load dcgan-program.json
+    PYTHONPATH=src python -m repro.program dcgan --backend auto --stats
 
 The first form is the CI smoke: resolving the whole spec touches no
 arrays and runs no jit — a broken resolution path fails fast and cheap.
+The last prints the resolution-counter deltas of the build (plan-cache
+hits/misses, pinned/tuned/heuristic provenance, degradations) from the
+``repro.obs`` metrics registry — the quickest answer to "did my plan
+file actually get used".
 """
 
 from __future__ import annotations
@@ -24,8 +29,10 @@ from repro.core.dataflow import DataflowPolicy, available_backends
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.program",
-        description="Build and describe an ahead-of-time compiled GAN "
-                    "program (the supported execution API).")
+        description="Build, describe, export/load, and (--stats) "
+                    "account the resolution of an ahead-of-time "
+                    "compiled GAN program (the supported execution "
+                    "API).")
     ap.add_argument("model", choices=sorted(GAN_MODELS))
     ap.add_argument("--role", default="both",
                     choices=("generator", "discriminator", "both"))

@@ -22,7 +22,7 @@ from repro.core.dataflow import conv as df_conv
 from repro.core.dataflow import tconv as df_tconv
 from repro.program.spec import ProgramSpec
 
-__all__ = ["Program", "load_or_build"]
+__all__ = ["Program", "build_bucket_programs", "load_or_build"]
 
 log = logging.getLogger(__name__)
 
@@ -125,6 +125,33 @@ class Program:
         return (f"Program({self.spec.model}/{self.spec.role}, "
                 f"{len(self.spec.layers)} layers, "
                 f"{self.spec.summary()}, traces={self.traces})")
+
+
+def build_bucket_programs(spec: ProgramSpec, buckets, *,
+                          differentiable: bool = False
+                          ) -> dict[int, "Program"]:
+    """One :class:`Program` per batch-size bucket, all from **one**
+    frozen spec.
+
+    The continuous-batching serving engine
+    (:class:`repro.serve.gan_engine.GanEngine`) coalesces requests into
+    a small set of batch-size buckets.  Resolution (the config → policy
+    → plan walk) happened once when ``spec`` was built; this helper
+    only fans the frozen records out into one jitted executable per
+    bucket, so each bucket traces exactly once — ``programs[b].traces``
+    stays at 1 however many requests ride that bucket (pinned by the
+    engine tests) and the ``program.retraces`` counter never fires on
+    the serving path.
+
+    ``buckets`` is deduplicated and sorted ascending; every bucket must
+    be a positive int.
+    """
+    sizes = sorted({int(b) for b in buckets})
+    if not sizes or sizes[0] <= 0:
+        raise ValueError(f"buckets must be positive ints, got "
+                         f"{tuple(buckets)}")
+    return {b: Program(spec, differentiable=differentiable)
+            for b in sizes}
 
 
 def load_or_build(path, cfg, batch: int, role: str = "generator", *,

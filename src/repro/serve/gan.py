@@ -21,9 +21,24 @@ generated sample is eventually served.  ``samples_served`` /
 the generator produced (``samples_discarded`` stays 0 while the buffer
 carries remainders; it exists so capacity planning can trust the
 invariant ``served + buffered + discarded == batches x batch_size``).
-Calls are synchronous and the server is single-threaded: it advances its
-own RNG state per batch, so drive it from one thread (or shard requests
-across servers with distinct seeds).
+
+Two ways to drive it:
+
+* **Synchronous** — call ``generate(n)`` from one thread; the call
+  blocks until the samples are on the host.
+* **Asynchronous** — call ``submit(n)`` (from any number of threads):
+  the first ``submit`` hands the server's program, RNG key, and
+  remainder buffer to an internal continuous-batching
+  :class:`~repro.serve.gan_engine.GanEngine`, and returns a
+  :class:`~repro.serve.gan_engine.GanFuture`.  From then on
+  ``generate`` delegates to the engine too (``submit(n).result()``), so
+  the sample stream stays single-sourced and bit-identical to the
+  synchronous one at equal seeds.  Call ``close()`` (or use the server
+  as a context manager) to shut the engine down cleanly.
+
+For many concurrent clients, batch-size buckets, and measured
+throughput/latency, construct a :class:`~repro.serve.gan_engine
+.GanEngine` directly — see ``docs/serving.md``.
 """
 
 from __future__ import annotations
@@ -80,6 +95,7 @@ class GanServer:
         self._m_occupancy = _obs.histogram(
             "serve.batch_occupancy", bounds=_OCCUPANCY_BOUNDS, **labels)
         self._spare: np.ndarray | None = None   # carried tail samples
+        self._engine = None     # async façade (created on first submit)
         if program is not None:
             if program.spec.role != "generator":
                 raise ValueError(f"GanServer needs a generator program, "
@@ -108,20 +124,30 @@ class GanServer:
         self._generate = self.program.apply
 
     # -- accounting (registry-backed; attribute API preserved) --------------
+    # Once the async façade is live, the engine continues the stream:
+    # totals are the pre-handoff counts plus the engine's, so the
+    # ``served + buffered + discarded == batches × batch_size``
+    # invariant spans the handoff.
     @property
     def batches_served(self) -> int:
-        return self._m_batches.value
+        eng = self._engine
+        return self._m_batches.value + (eng.batches_served if eng else 0)
 
     @property
     def samples_served(self) -> int:
-        return self._m_served.value
+        eng = self._engine
+        return self._m_served.value + (eng.samples_served if eng else 0)
 
     @property
     def samples_discarded(self) -> int:
-        return self._m_discarded.value
+        eng = self._engine
+        return self._m_discarded.value + \
+            (eng.samples_discarded if eng else 0)
 
     @property
     def samples_buffered(self) -> int:
+        if self._engine is not None:
+            return self._engine.samples_buffered
         return 0 if self._spare is None else len(self._spare)
 
     def _set_spare(self, spare: np.ndarray | None) -> None:
@@ -132,12 +158,50 @@ class GanServer:
         self.key, k = jax.random.split(self.key)
         return k
 
+    # -- async façade -------------------------------------------------------
+    def submit(self, n: int):
+        """Asynchronous :meth:`generate`: enqueue a request and return
+        a :class:`~repro.serve.gan_engine.GanFuture` (thread-safe).
+
+        The first call hands the server's program, RNG key, and
+        remainder buffer to an internal single-bucket
+        :class:`~repro.serve.gan_engine.GanEngine`; the stream picks up
+        exactly where the synchronous calls left off, so mixing
+        ``generate`` and ``submit`` never forks or reorders it."""
+        return self._ensure_engine().submit(n)
+
+    def close(self, drain: bool = True) -> None:
+        """Shut the async engine down (no-op if :meth:`submit` was
+        never called).  ``drain=True`` answers queued requests first;
+        ``drain=False`` fails unscheduled ones with ``ServerClosed``."""
+        if self._engine is not None:
+            self._engine.close(drain=drain)
+
+    def __enter__(self) -> "GanServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None)
+
+    def _ensure_engine(self):
+        if self._engine is None:
+            from repro.serve.gan_engine import GanEngine
+            self._engine = GanEngine(
+                self.cfg, self.params, buckets=(self.batch_size,),
+                policy=self.policy, program=self.program,
+                key=self.key, spare=self._spare, warmup=False)
+            self._set_spare(None)   # the engine owns the buffer now
+        return self._engine
+
     def generate(self, n: int) -> np.ndarray:
         """Generate ``n`` images (n, *spatial, C) as numpy.  Remainder
         samples from the final batch are buffered for the next call,
-        never discarded."""
+        never discarded.  After the first :meth:`submit`, delegates to
+        the async engine (same stream, same accounting)."""
         if int(n) <= 0:
             raise ValueError(f"n must be positive, got {n}")
+        if self._engine is not None:
+            return self._engine.generate(n)
         t0 = time.perf_counter()
         with _obs.trace("serve.generate", server=self.server_id,
                         n=int(n)) as sp:

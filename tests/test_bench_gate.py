@@ -105,6 +105,34 @@ def test_compare_directions_and_threshold():
     assert failures == []
 
 
+def test_widened_threshold_directions():
+    """traffic rows gate at a multiplied threshold ("lower*2" /
+    "higher*2"): a +30% p99 or -30% throughput passes where a standard
+    row would fail, but a 2x swing still gates."""
+    df = {"dcgan": {"polyphase_us": 1000.0, "wallclock_speedup": 2.0,
+                    "traffic_high_p99_us": 10000.0,
+                    "traffic_high_throughput_sps": 400.0}}
+    base = cr.extract(df, {})
+    assert base["dataflow"]["dcgan"]["traffic_high_p99_us"] == 10000.0
+    fresh = json.loads(json.dumps(base))
+    fresh["dataflow"]["dcgan"]["traffic_high_p99_us"] = 13000.0   # +30%
+    fresh["dataflow"]["dcgan"]["traffic_high_throughput_sps"] = 290.0
+    failures, _ = cr.compare(base, fresh, threshold=0.25)
+    assert failures == []        # within the widened (50%) threshold
+    fresh["dataflow"]["dcgan"]["traffic_high_p99_us"] = 21000.0   # +110%
+    fresh["dataflow"]["dcgan"]["traffic_high_throughput_sps"] = 180.0
+    failures, _ = cr.compare(base, fresh, threshold=0.25)
+    assert len(failures) == 2
+    assert any("traffic_high_p99_us" in f and "+50%" in f
+               for f in failures)
+    assert any("traffic_high_throughput_sps" in f for f in failures)
+    # the same +30% on a standard-threshold row still fails
+    fresh2 = json.loads(json.dumps(base))
+    fresh2["dataflow"]["dcgan"]["polyphase_us"] = 1300.0
+    failures, _ = cr.compare(base, fresh2, threshold=0.25)
+    assert len(failures) == 1 and "polyphase_us" in failures[0]
+
+
 def test_compare_missing_model_fails():
     base = cr.extract(DATAFLOW, TUNE)
     fresh = json.loads(json.dumps(base))

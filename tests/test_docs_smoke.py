@@ -1,0 +1,73 @@
+"""CI docs smoke runner (`tools/docs_smoke.py`): fenced-block
+extraction (info strings, skip marker), shared per-file namespace
+execution, and failure attribution to doc file + line."""
+
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from tools import docs_smoke  # noqa: E402
+
+MD = textwrap.dedent("""\
+    # Title
+
+    ```python
+    x = 1
+    ```
+
+    ```bash
+    echo not-python
+    ```
+
+    <!-- docs-smoke: skip -->
+    ```python
+    raise RuntimeError("must not run")
+    ```
+
+    ```py
+    y = x + 1
+    ```
+""")
+
+
+def test_extract_blocks_info_strings_and_skip():
+    blocks = docs_smoke.extract_blocks(MD)
+    assert [code for _, code in blocks] == ["x = 1", "y = x + 1"]
+    # 1-indexed first code line of each block
+    assert [line for line, _ in blocks] == [4, 17]
+
+
+def test_run_file_shares_namespace_across_blocks(tmp_path):
+    p = tmp_path / "doc.md"
+    p.write_text(MD)
+    assert docs_smoke.run_file(p) == 2   # skipped block didn't run
+
+
+def test_run_file_failure_names_doc_and_line(tmp_path):
+    p = tmp_path / "bad.md"
+    p.write_text("```python\nboom\n```\n")
+    with pytest.raises(NameError) as exc:
+        docs_smoke.run_file(p)
+    tb = exc.traceback[-1]
+    assert str(tb.path).endswith("bad.md:2")
+
+
+def test_default_files_cover_readme_and_docs():
+    files = [f.name for f in docs_smoke.default_files()]
+    assert "README.md" in files
+    assert "ARCHITECTURE.md" in files and "serving.md" in files
+
+
+def test_main_runs_and_reports(tmp_path, capsys):
+    good = tmp_path / "good.md"
+    good.write_text("```python\nassert 1 + 1 == 2\n```\n")
+    assert docs_smoke.main([str(good)]) == 0
+    assert "1 block(s)" in capsys.readouterr().out
+    bad = tmp_path / "bad.md"
+    bad.write_text("```python\nraise ValueError('x')\n```\n")
+    assert docs_smoke.main([str(good), str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "bad.md" in out

@@ -1,0 +1,373 @@
+"""Continuous-batching async serving engine (`serve.gan_engine`):
+bit-parity with the sequential server under concurrent producers,
+remainder-buffer accounting under interleaving, clean shutdown with
+requests in flight, and the ahead-of-time bucket-set trace pin."""
+
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.models.gan import GanConfig, init_gan
+from repro.serve.gan import GanServer
+from repro.serve.gan_engine import GanEngine, ServerClosed
+
+SCALE = 0.03125
+
+
+def _cfg(**kw):
+    return GanConfig(name="dcgan", channel_scale=SCALE, **kw)
+
+
+def _params(cfg=None):
+    g, _ = init_gan(cfg or _cfg(), jax.random.PRNGKey(0))
+    return g
+
+
+def _reassemble(futures):
+    """Concatenate answered futures in stream order (offset is set by
+    the scheduler at allocation, so resolve before sorting)."""
+    outs = [(f, f.result(30)) for f in futures]
+    outs.sort(key=lambda pair: pair[0].offset)
+    return np.concatenate([o for _, o in outs], axis=0)
+
+
+# -- bit-parity with the sequential server ----------------------------------
+
+def test_sequential_parity_with_gan_server():
+    """A single-bucket engine produces the bit-identical stream to
+    GanServer.generate at equal seeds, whatever the call chunking."""
+    cfg, g = _cfg(), _params()
+    ref = GanServer(cfg, g, batch_size=4, seed=5).generate(8)
+    with GanEngine(cfg, g, buckets=(4,), seed=5) as eng:
+        chunked = np.concatenate([eng.generate(3), eng.generate(3),
+                                  eng.generate(2)])
+    np.testing.assert_array_equal(chunked, ref)
+
+
+@pytest.mark.parametrize("sizes", [(3, 3, 2), (1, 1, 1, 1, 4),
+                                   (5, 2, 1)])
+def test_concurrent_producers_bit_parity(sizes):
+    """N producer threads submit concurrently; reassembling the
+    responses by stream offset recovers the sequential server's exact
+    sample stream — coalescing reorders nothing."""
+    cfg, g = _cfg(), _params()
+    total = sum(sizes)
+    ref = GanServer(cfg, g, batch_size=4, seed=7).generate(total)
+    with GanEngine(cfg, g, buckets=(4,), seed=7) as eng:
+        futures, threads = [], []
+        lock = threading.Lock()
+
+        def produce(n):
+            f = eng.submit(n)
+            with lock:
+                futures.append(f)
+
+        for n in sizes:
+            threads.append(threading.Thread(target=produce, args=(n,)))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        out = _reassemble(futures)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_engine_deterministic_across_runs():
+    """Same seed + same sequential submission schedule → identical
+    multi-bucket streams (bucket choice is demand-driven, and demand
+    is deterministic when submissions are)."""
+    cfg, g = _cfg(), _params()
+    outs = []
+    for _ in range(2):
+        with GanEngine(cfg, g, buckets=(1, 2, 4), seed=11) as eng:
+            outs.append(np.concatenate([eng.generate(3),
+                                        eng.generate(4)]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# -- remainder-buffer accounting under interleaving -------------------------
+
+def test_remainder_invariant_under_interleaving():
+    """Whatever the thread interleaving and bucket choices, every
+    generated sample is served, buffered, or discarded — and nothing
+    is discarded in normal operation."""
+    cfg, g = _cfg(), _params()
+    sizes = [3, 1, 5, 2, 7, 1, 4, 3]
+    with GanEngine(cfg, g, buckets=(1, 2, 4), seed=0) as eng:
+        futures, threads = [], []
+        lock = threading.Lock()
+
+        def produce(n):
+            f = eng.submit(n)
+            with lock:
+                futures.append(f)
+
+        for n in sizes:
+            threads.append(threading.Thread(target=produce, args=(n,)))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for f in futures:
+            assert f.result(30).shape == (f.n, 64, 64, 3)
+        assert eng.samples_served == sum(sizes)
+        assert eng.samples_discarded == 0
+        assert eng.samples_served + eng.samples_buffered + \
+            eng.samples_discarded == \
+            eng.samples_generated + eng.initial_spare
+    # close() drains: the invariant still holds afterwards
+    assert eng.samples_served + eng.samples_buffered + \
+        eng.samples_discarded == eng.samples_generated
+
+
+def test_spare_buffer_carries_across_requests():
+    """A bucket's tail is buffered and serves the next request before
+    any new compute (same accounting as the synchronous server)."""
+    cfg, g = _cfg(), _params()
+    with GanEngine(cfg, g, buckets=(4,), seed=3) as eng:
+        eng.generate(3)
+        assert (eng.samples_served, eng.samples_buffered) == (3, 1)
+        assert eng.batches_served == 1
+        eng.generate(1)          # served from the buffer, no new batch
+        assert (eng.samples_served, eng.samples_buffered) == (4, 0)
+        assert eng.batches_served == 1
+
+
+# -- clean shutdown ---------------------------------------------------------
+
+def test_close_drains_requests_in_flight():
+    """close() answers every queued request before the scheduler
+    exits — no future is left hanging or failed."""
+    cfg, g = _cfg(), _params()
+    eng = GanEngine(cfg, g, buckets=(2,), seed=0)
+    futures = [eng.submit(3) for _ in range(4)]
+    eng.close()                       # drain=True
+    for f in futures:
+        assert f.result(30).shape == (3, 64, 64, 3)
+    assert eng.samples_served == 12
+
+
+def test_close_without_drain_fails_unscheduled_requests():
+    """close(drain=False): requests whose samples are already in
+    flight are answered; the rest get ServerClosed — never a hang."""
+    cfg, g = _cfg(), _params()
+    release = threading.Event()
+    eng = GanEngine(cfg, g, buckets=(2,), seed=0)
+    # stall the scheduler inside a dispatch so requests pile up
+    prog = eng.programs[2]
+    real_apply = prog.apply
+
+    def slow_apply(params, z):
+        release.wait(10)
+        return real_apply(params, z)
+
+    prog.apply = slow_apply
+    futures = [eng.submit(2) for _ in range(6)]
+    time.sleep(0.05)                  # let the scheduler enter dispatch
+    threading.Timer(0.05, release.set).start()
+    eng.close(drain=False)
+    answered = failed = 0
+    for f in futures:
+        err = f.exception(30)         # never hangs
+        if err is None:
+            assert f.result().shape == (2, 64, 64, 3)
+            answered += 1
+        else:
+            assert isinstance(err, ServerClosed)
+            failed += 1
+    assert answered + failed == 6 and failed >= 1
+    with pytest.raises(ServerClosed):
+        eng.submit(1)
+
+
+def test_scheduler_exception_fails_outstanding_requests():
+    """An exception on the scheduler thread answers every outstanding
+    future with that exception and closes the engine."""
+    cfg, g = _cfg(), _params()
+    eng = GanEngine(cfg, g, buckets=(2,), seed=0)
+
+    def boom(params, z):
+        raise RuntimeError("device on fire")
+
+    eng.programs[2].apply = boom
+    f = eng.submit(2)
+    with pytest.raises(RuntimeError, match="device on fire"):
+        f.result(30)
+    with pytest.raises(ServerClosed):
+        eng.submit(1)
+    eng.close()
+
+
+def test_context_manager_closes():
+    cfg, g = _cfg(), _params()
+    with GanEngine(cfg, g, buckets=(2,), seed=0) as eng:
+        eng.generate(2)
+    with pytest.raises(ServerClosed):
+        eng.submit(1)
+
+
+def test_backpressure_bounds_the_queue():
+    """max_pending blocks submit while the queue is full; a bounded
+    wait surfaces as TimeoutError instead of unbounded memory."""
+    cfg, g = _cfg(), _params()
+    release = threading.Event()
+    eng = GanEngine(cfg, g, buckets=(2,), seed=0, max_pending=1)
+    prog = eng.programs[2]
+    real_apply = prog.apply
+
+    def stalled_apply(p, z):
+        release.wait(10)
+        return real_apply(p, z)
+
+    prog.apply = stalled_apply
+    first = eng.submit(2)             # occupies the single queue slot
+    time.sleep(0.05)
+    with pytest.raises(TimeoutError):
+        eng.submit(2, timeout=0.05)
+    release.set()
+    assert first.result(30).shape == (2, 64, 64, 3)
+    eng.close()
+
+
+# -- ahead-of-time bucket set ----------------------------------------------
+
+def test_bucket_set_traces_exactly_once_per_shape():
+    """The bucket set is compiled ahead of time from ONE spec: however
+    many requests ride a bucket, its executable traces exactly once,
+    and serving increments no retrace counter."""
+    from repro import obs
+
+    cfg, g = _cfg(), _params()
+    retraces0 = obs.counter("program.retraces").value
+    with GanEngine(cfg, g, buckets=(1, 2, 4), seed=0) as eng:
+        for n in (1, 2, 4, 3, 7, 4, 1, 2):
+            eng.generate(n)
+        assert set(eng.programs) == {1, 2, 4}
+        specs = {id(p.spec) for p in eng.programs.values()}
+        assert len(specs) == 1        # one frozen spec, three wrappers
+        for b, prog in eng.programs.items():
+            assert prog.traces == 1, (b, prog.traces)
+    assert obs.counter("program.retraces").value == retraces0
+
+
+def test_bucket_choice_covers_demand():
+    """Each batch runs the smallest bucket covering coalesced demand,
+    the largest under overload — generated counts pin the choices."""
+    cfg, g = _cfg(), _params()
+    with GanEngine(cfg, g, buckets=(1, 2, 4), seed=0) as eng:
+        eng.generate(1)
+        assert eng.samples_generated == 1          # bucket 1
+        eng.generate(2)
+        assert eng.samples_generated == 3          # bucket 2
+        eng.generate(7)     # overload → 4, then demand 3 → 4 again
+        assert eng.samples_generated == 11
+        assert eng.samples_buffered == 1
+
+
+def test_exported_program_drives_engine():
+    """ProgramSpec JSON → Program → GanEngine(program=...): the
+    ship-a-tuned-program flow serves identically through the engine."""
+    from repro.program import Program, ProgramSpec
+
+    cfg, g = _cfg(), _params()
+    ref_srv = GanServer(cfg, g, batch_size=4, seed=9)
+    spec = ProgramSpec.from_json(ref_srv.program.spec.to_json())
+    with GanEngine(cfg, g, buckets=(4,), seed=9,
+                   program=Program(spec, differentiable=False)) as eng:
+        np.testing.assert_array_equal(eng.generate(6),
+                                      ref_srv.generate(6))
+
+
+def test_engine_rejects_mismatched_program():
+    from repro.program import Program, ProgramSpec
+
+    cfg, g = _cfg(), _params()
+    disc = Program(ProgramSpec.build(cfg, 4, "discriminator"))
+    with pytest.raises(ValueError, match="generator"):
+        GanEngine(cfg, g, buckets=(4,), program=disc)
+    other = Program(ProgramSpec.build(
+        GanConfig(name="dcgan", channel_scale=2 * SCALE), 4,
+        "generator"))
+    with pytest.raises(ValueError, match="different workload"):
+        GanEngine(cfg, g, buckets=(4,), program=other)
+
+
+def test_engine_rejects_bad_parameters():
+    cfg, g = _cfg(), _params()
+    with pytest.raises(ValueError, match="buckets"):
+        GanEngine(cfg, g, buckets=())
+    with pytest.raises(ValueError, match="buckets"):
+        GanEngine(cfg, g, buckets=(0, 2))
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        GanEngine(cfg, g, buckets=(2,), pipeline_depth=0)
+    with pytest.raises(ValueError, match="max_pending"):
+        GanEngine(cfg, g, buckets=(2,), max_pending=0)
+    with GanEngine(cfg, g, buckets=(2,)) as eng:
+        with pytest.raises(ValueError, match="positive"):
+            eng.submit(0)
+
+
+# -- observability ----------------------------------------------------------
+
+def test_engine_metrics_and_request_spans():
+    """The engine emits queue-depth gauge updates, a batch-occupancy
+    histogram, per-request latency percentiles, and one cross-thread
+    `engine.request` span per completed request."""
+    from repro import obs
+
+    cfg, g = _cfg(), _params()
+    sink = obs.enable()
+    try:
+        with GanEngine(cfg, g, buckets=(4,), seed=0) as eng:
+            for n in (3, 5, 4):
+                eng.generate(n)
+            labels = {"engine": eng.engine_id}
+            h = obs.histogram("engine.request_us", **labels)
+            assert h.count == 3
+            assert h.percentile(50) > 0
+            occ = obs.histogram("engine.batch_occupancy", **labels)
+            assert occ.count == eng.batches_served
+            assert obs.counter("engine.requests", **labels).value == 3
+            assert obs.gauge("engine.queue_depth", **labels).value == 0
+        spans = sink.spans("engine.request")
+        assert len(spans) == 3
+        assert sorted(s["attrs"]["n"] for s in spans) == [3, 4, 5]
+        assert all(s["dur_us"] > 0 for s in spans)
+        # offsets partition the stream contiguously
+        offs = sorted((s["attrs"]["offset"], s["attrs"]["n"])
+                      for s in spans)
+        pos = 0
+        for off, n in offs:
+            assert off == pos
+            pos += n
+    finally:
+        obs.disable()
+
+
+# -- GanServer async façade -------------------------------------------------
+
+def test_server_facade_mixed_sync_async_parity():
+    """GanServer.submit hands the stream to an internal engine; mixing
+    generate() and submit() keeps it bit-identical to a purely
+    synchronous server at equal seeds."""
+    cfg, g = _cfg(), _params()
+    ref = GanServer(cfg, g, batch_size=4, seed=5).generate(12)
+    with GanServer(cfg, g, batch_size=4, seed=5) as srv:
+        parts = [srv.generate(3)]               # sync path (buffers 1)
+        parts.append(srv.submit(5).result(30))  # façade takes over
+        parts.append(srv.generate(4))           # delegated
+        assert srv.samples_served == 12
+        assert srv.batches_served == 3
+        assert srv.samples_served + srv.samples_buffered + \
+            srv.samples_discarded == srv.batches_served * 4
+    np.testing.assert_array_equal(np.concatenate(parts), ref)
+
+
+def test_server_close_without_submit_is_noop():
+    cfg, g = _cfg(), _params()
+    srv = GanServer(cfg, g, batch_size=2, seed=0)
+    srv.close()                      # no engine yet — must not raise
+    assert srv.generate(2).shape == (2, 64, 64, 3)

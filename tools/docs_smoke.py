@@ -1,0 +1,111 @@
+"""Execute the fenced ``python`` blocks in the repo's markdown docs.
+
+The CI docs job runs this over ``README.md`` and ``docs/*.md`` so the
+examples in those pages are executed, not just read — a renamed
+parameter or a drifted import fails the build instead of rotting on the
+page.  The contract for doc authors:
+
+* A block fenced exactly as ```` ```python ```` is executed.  Other
+  info strings (```` ```bash ````, ```` ```text ````, bare fences) are
+  ignored.
+* Blocks in one file run **in order, in one shared namespace** — a
+  later block may use imports and variables from an earlier one, like a
+  reader following along.
+* Execution happens inside a temporary working directory, so examples
+  may write files (``prog.save("x.json")``) without dirtying the repo.
+* Examples must be self-contained and tiny (e.g. ``channel_scale=
+  0.03125``, single-digit batch sizes): the whole suite should stay in
+  CI-smoke territory.
+* To exempt a block that cannot run in CI, put ``<!-- docs-smoke:
+  skip -->`` on its own line within the three lines above the fence.
+
+Usage::
+
+    PYTHONPATH=src python tools/docs_smoke.py            # README + docs/
+    PYTHONPATH=src python tools/docs_smoke.py docs/serving.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import os
+import pathlib
+import sys
+import tempfile
+import traceback
+
+SKIP_MARKER = "docs-smoke: skip"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def extract_blocks(text: str) -> list[tuple[int, str]]:
+    """``(first_code_line_number, code)`` per runnable python block."""
+    blocks: list[tuple[int, str]] = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped in ("```python", "```py"):
+            skip = any(SKIP_MARKER in lines[j]
+                       for j in range(max(0, i - 3), i))
+            code: list[str] = []
+            i += 1
+            start = i + 1                      # 1-indexed first code line
+            while i < len(lines) and lines[i].strip() != "```":
+                code.append(lines[i])
+                i += 1
+            if not skip:
+                blocks.append((start, "\n".join(code)))
+        i += 1
+    return blocks
+
+
+def run_file(path: pathlib.Path) -> int:
+    """Execute every runnable block of one markdown file in a shared
+    namespace; returns the number of blocks run.  Raises on failure."""
+    blocks = extract_blocks(path.read_text())
+    namespace: dict = {"__name__": f"docs_smoke:{path.name}"}
+    for line, code in blocks:
+        # the synthetic filename puts doc+line in any traceback
+        exec(compile(code, f"{path}:{line}", "exec"), namespace)
+    return len(blocks)
+
+
+def default_files() -> list[pathlib.Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", type=pathlib.Path,
+                    help="markdown files (default: README.md docs/*.md)")
+    args = ap.parse_args(argv)
+    files = [f.resolve() for f in args.files] or default_files()
+
+    failures = 0
+    with tempfile.TemporaryDirectory(prefix="docs-smoke-") as tmp, \
+            contextlib.ExitStack() as stack:
+        prev = os.getcwd()
+        os.chdir(tmp)
+        stack.callback(os.chdir, prev)
+        for path in files:
+            rel = path.relative_to(ROOT) if path.is_relative_to(ROOT) \
+                else path
+            try:
+                n = run_file(path)
+            except Exception:
+                failures += 1
+                print(f"FAIL {rel}")
+                traceback.print_exc()
+            else:
+                print(f"ok   {rel}: {n} block(s)")
+    if failures:
+        print(f"\n{failures} file(s) failed")
+        return 1
+    print("\nall docs examples executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
