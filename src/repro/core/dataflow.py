@@ -71,6 +71,9 @@ __all__ = [
     "Epilogue",
     "Resolution",
     "ACTIVATIONS",
+    "SHARDINGS",
+    "COUT_SHARD_MIN_BYTES",
+    "choose_layer_sharding",
     "pallas_kernel_supported",
     "backend_supports",
     "blocks_valid",
@@ -804,18 +807,58 @@ _conv_ep_diff.defvjp(_conv_ep_fwd, _conv_ep_bwd)
 class Resolution:
     """One layer's fully resolved execution: the concrete backend, its
     Pallas tile shapes (``None`` = heuristic defaults or a pure-JAX
-    backend), and the provenance of that choice.
+    backend), the provenance of that choice, and — when the layer is
+    resolved for a device mesh — how it is laid out across it.
 
     ``source`` is one of ``"pinned"`` (the policy named a backend or the
     kernel preference explicitly), ``"tuned"`` (a measured autotuner
     plan), or ``"heuristic"`` (the platform default, including auto-plan
-    misses).  This is the data form of dispatch — what
-    :class:`repro.program.ProgramSpec` freezes ahead of time."""
+    misses).  ``sharding`` is one of :data:`SHARDINGS`: ``"data"``
+    (batch split over the ``data`` mesh axis, weights replicated — the
+    serving-throughput layout) or ``"cout"`` (weights and bias
+    additionally sharded on Cout over the ``model`` axis; the layer's
+    local output is all-gathered back to full Cout, no halo exchange
+    needed because Cout is a pure output dimension).  This is the data
+    form of dispatch — what :class:`repro.program.ProgramSpec` freezes
+    ahead of time."""
 
     backend: str
     blocks: tuple[int, ...] | None = None
     source: str = "heuristic"
     measured_us: float | None = None
+    sharding: str = "data"
+
+
+# Per-layer mesh layouts a resolution can freeze (see Resolution).
+SHARDINGS = ("data", "cout")
+
+# The footprint heuristic's default threshold: a layer whose weight
+# tensor is at least this many bytes goes Cout-model-parallel on a
+# mesh with model > 1 (the big 3D-GAN tconvs: g1 is 4³·512·256·4B
+# ≈ 34 MiB; the small 2-D generator tails stay data-parallel where an
+# all-gather would cost more than the weight traffic it saves).
+COUT_SHARD_MIN_BYTES = 16 * 1024 * 1024
+
+
+def choose_layer_sharding(kernel: Sequence[int], cin: int, cout: int,
+                          mesh_model: int, *,
+                          min_bytes: int | None = None) -> str:
+    """The footprint heuristic picking one of :data:`SHARDINGS` for a
+    layer resolved against a mesh with ``mesh_model`` devices on the
+    ``model`` axis.
+
+    ``"cout"`` (weights sharded on Cout, no halo exchange) is chosen
+    only when the model axis is real (> 1), Cout divides it evenly, and
+    the f32 weight footprint ``prod(kernel)·cin·cout·4`` reaches
+    ``min_bytes`` (default :data:`COUT_SHARD_MIN_BYTES`) — the layers
+    that outgrow a single device's memory/bandwidth.  Everything else
+    (including every layer of a mesh-less program) is ``"data"``."""
+    if mesh_model <= 1 or cout % mesh_model != 0:
+        return "data"
+    threshold = COUT_SHARD_MIN_BYTES if min_bytes is None \
+        else int(min_bytes)
+    weight_bytes = int(np.prod(tuple(kernel))) * int(cin) * int(cout) * 4
+    return "cout" if weight_bytes >= threshold else "data"
 
 
 def blocks_valid(kind: str, in_spatial: Sequence[int],
@@ -848,7 +891,10 @@ def resolve_execution(policy: DataflowPolicy, kind: str,
                       strides: Sequence[int], paddings: Sequence[int],
                       cin: int, cout: int, *, batch: int = 1,
                       dtype="float32", epilogue: Epilogue | None = None,
-                      planner=None, measure: bool = False) -> Resolution:
+                      planner=None, measure: bool = False,
+                      mesh_model: int = 1,
+                      cout_shard_min_bytes: int | None = None
+                      ) -> Resolution:
     """Resolve one layer's execution path **as data** — the single
     resolution routine behind both the per-call dispatch and the
     ahead-of-time :mod:`repro.program` builder.
@@ -861,12 +907,31 @@ def resolve_execution(policy: DataflowPolicy, kind: str,
     divide the geometry — degrading to the heuristic rather than
     raising.  ``measure=True`` additionally tunes plan misses (never do
     this from dispatch: it may run inside a ``jit`` trace, where timing
-    is meaningless — ahead-of-time builders only)."""
+    is meaningless — ahead-of-time builders only).
+
+    ``mesh_model > 1`` resolves the layer against a device mesh with
+    that many devices on the ``model`` axis: :func:`choose_layer_sharding`
+    picks the layout (overridable threshold via
+    ``cout_shard_min_bytes``), and tuned Pallas blocks that do not
+    divide the *local* Cout shard of a ``"cout"`` layer are dropped
+    (reason counter ``dataflow.resolve.shard_blocks``) — the kernel
+    executes per-device on ``cout / mesh_model`` channels."""
     with _obs.trace("dataflow.resolve", kind=kind) as sp:
         res, reasons = _resolve_execution(
             policy, kind, in_spatial, kernel, strides, paddings, cin,
             cout, batch=batch, dtype=dtype, epilogue=epilogue,
             planner=planner, measure=measure)
+        sharding = choose_layer_sharding(
+            kernel, cin, cout, mesh_model,
+            min_bytes=cout_shard_min_bytes)
+        if sharding != res.sharding:
+            res = dataclasses.replace(res, sharding=sharding)
+        if sharding == "cout" and res.blocks is not None and \
+                not blocks_valid(kind, in_spatial, kernel, strides,
+                                 paddings, cin, cout // mesh_model,
+                                 res.blocks):
+            res = dataclasses.replace(res, blocks=None)
+            reasons.append("shard_blocks")
         sp.set(backend=res.backend, source=res.source)
     _obs.counter("dataflow.resolve").inc()
     _obs.counter(f"dataflow.resolve.{res.source}").inc()

@@ -24,9 +24,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int | None = None, model: int | None = None):
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    """A ``("data", "model")`` mesh over local devices (tests / CPU
+    examples / single-host serving).
+
+    Four forms, by which axes are pinned:
+
+    * ``make_local_mesh()`` — factor *all* local devices: ``model`` is
+      the largest of 4, 2 that divides the device count, ``data`` the
+      quotient.  **Odd device counts (and 1) fall back to
+      ``model=1``** — every device goes to the ``data`` axis and
+      Cout-model-parallel layers have nothing to shard over.  This
+      silent fallback is intentional (a degraded mesh beats a crash on
+      a 6-core runner) but means ``model > 1`` must never be *assumed*
+      from the no-argument form.
+    * ``make_local_mesh(data=N)`` — pure data-parallel convenience:
+      exactly ``(N, 1)``, the common GAN serving mesh.
+    * ``make_local_mesh(model=M)`` — all devices, ``M``-way model
+      axis: ``(n // M, M)``; raises if ``M`` does not divide the
+      device count.
+    * ``make_local_mesh(data=N, model=M)`` — the exact requested shape
+      over the first ``N·M`` devices; raises if that many do not
+      exist.  (Explicit ``devices=`` slice: ``jax.make_mesh`` would
+      silently take a prefix anyway, this just makes it deliberate and
+      checked.)
+    """
     n = len(jax.devices())
-    if data is None or model is None:
+    if data is None and model is None:
         model = 1
         data = n
         for m in (4, 2):
@@ -34,4 +57,16 @@ def make_local_mesh(data: int | None = None, model: int | None = None):
                 model = m
                 data = n // m
                 break
-    return jax.make_mesh((data, model), ("data", "model"))
+    elif model is None:
+        model = 1
+    elif data is None:
+        if n % model:
+            raise ValueError(f"model={model} does not divide the "
+                             f"{n} local devices")
+        data = n // model
+    need = data * model
+    if need > n:
+        raise ValueError(f"mesh ({data}, {model}) needs {need} devices; "
+                         f"only {n} available")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:need])

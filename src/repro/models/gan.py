@@ -73,6 +73,10 @@ class GanConfig:
     # name, the "pallas" preference, or "auto" (measured per-layer plans
     # from the repro.tune planner, heuristic fallback on a plan miss).
     backend: str | None = None
+    # (data, model) device mesh programs built from this config freeze
+    # by default (see ProgramSpec.build); None = single-device.  A
+    # tuple so the config stays hashable for the program cache.
+    mesh: tuple[int, int] | None = None
 
     @property
     def policy(self) -> DataflowPolicy:

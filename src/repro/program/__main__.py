@@ -40,6 +40,12 @@ def main(argv=None) -> int:
                     help="planning batch (plan keys; apply() accepts "
                          "any batch)")
     ap.add_argument("--channel-scale", type=float, default=1.0)
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="freeze a (data, model) device mesh into the "
+                         "spec, e.g. 4x2 (per-layer sharding chosen by "
+                         "the footprint heuristic; the exported file "
+                         "degrades to single-device on boxes without "
+                         "the devices)")
     ap.add_argument("--backend", default=None,
                     help="policy backend (a registered name, 'pallas', "
                          f"or 'auto'; registered: "
@@ -80,8 +86,16 @@ def main(argv=None) -> int:
             print(f"warning: plan file ignored ({planner.load_error})")
     policy = DataflowPolicy(backend=args.backend) if args.backend \
         else None
+    mesh = None
+    if args.mesh:
+        try:
+            data, model = args.mesh.lower().split("x")
+            mesh = (int(data), int(model))
+        except ValueError:
+            ap.error(f"--mesh wants DATAxMODEL (e.g. 4x2), "
+                     f"got {args.mesh!r}")
     cfg = GanConfig(name=args.model, channel_scale=args.channel_scale,
-                    backend=args.backend)
+                    backend=args.backend, mesh=mesh)
     roles = (args.role,) if args.role != "both" \
         else ("generator", "discriminator")
     if args.load and args.role == "both":

@@ -13,13 +13,19 @@ measurements.
 from __future__ import annotations
 
 import logging
+import warnings
 
 import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro import obs as _obs
+from repro.compat import shard_map as _shard_map
 from repro.core.dataflow import DataflowPolicy
 from repro.core.dataflow import conv as df_conv
 from repro.core.dataflow import tconv as df_tconv
+from repro.launch.mesh import make_local_mesh
+from repro.program.spec import _UNSET as _SPEC_UNSET
 from repro.program.spec import ProgramSpec
 
 __all__ = ["Program", "build_bucket_programs", "load_or_build"]
@@ -35,6 +41,18 @@ class Program:
     standalone entry point serving uses.  ``traces`` counts actual
     traces of ``apply`` — the executable-reuse contract is testable:
     repeated same-shape calls keep it at 1.
+
+    A spec with a frozen ``mesh`` makes the program **sharded**:
+    ``forward``/``apply`` wrap the layer replay in one
+    ``shard_map`` over a ``("data", "model")`` mesh — the batch splits
+    over ``data`` (weights replicated: the shard_map transpose psums
+    their cotangents, so data-parallel gradient reduction is automatic
+    when the forward is differentiated), and ``"cout"``-sharded layers
+    run on a local Cout shard of their weights followed by a tiled
+    ``all_gather``.  When the local process has fewer devices than the
+    spec's mesh needs, the program **degrades to single-device with a
+    warning** (``self.mesh is None``, ``program.mesh_degraded``
+    counter) — the exported file serves anywhere, just unsharded.
     """
 
     def __init__(self, spec: ProgramSpec, *, differentiable: bool = True):
@@ -45,6 +63,34 @@ class Program:
                            differentiable=self.differentiable)
             for le in spec.layers)
         self.traces = 0
+        self.mesh = None
+        if spec.mesh is not None:
+            need = spec.mesh[0] * spec.mesh[1]
+            have = len(jax.devices())
+            if need > have:
+                warnings.warn(
+                    f"program {spec.model}/{spec.role} wants a "
+                    f"{spec.mesh[0]}x{spec.mesh[1]} mesh ({need} "
+                    f"devices) but only {have} available; degrading "
+                    f"to single-device execution", RuntimeWarning,
+                    stacklevel=2)
+                _obs.counter("program.mesh_degraded").inc()
+            else:
+                self.mesh = make_local_mesh(data=spec.mesh[0],
+                                            model=spec.mesh[1])
+                _obs.counter("program.sharded").inc()
+        # parameter layouts for the sharded path: Cout-sharded layers
+        # split their weight's last (Cout) axis and bias over "model";
+        # everything else (incl. the generator projection) replicates
+        self._param_pspecs = {}
+        if self.mesh is not None:
+            for le in spec.layers:
+                if le.sharding != "cout":
+                    continue
+                self._param_pspecs[le.w_param] = \
+                    P(*((None,) * (le.nd + 1) + ("model",)))
+                if le.bias:
+                    self._param_pspecs[le.b_param] = P("model")
 
         def _traced(params, x):
             # Runs once per input shape (trace time, not per call) —
@@ -60,18 +106,68 @@ class Program:
     def build(cls, cfg, batch: int, role: str = "generator", *,
               policy: DataflowPolicy | None = None, planner=None,
               measure: bool = False, dtype: str = "float32",
-              differentiable: bool = True) -> "Program":
+              differentiable: bool = True, mesh=_SPEC_UNSET,
+              cout_shard_min_bytes: int | None = None) -> "Program":
         """:meth:`ProgramSpec.build` + wrap — the one-call form."""
         spec = ProgramSpec.build(cfg, batch, role, policy=policy,
                                  planner=planner, measure=measure,
-                                 dtype=dtype)
+                                 dtype=dtype, mesh=mesh,
+                                 cout_shard_min_bytes=cout_shard_min_bytes)
         return cls(spec, differentiable=differentiable)
+
+    # -- sharding queries ---------------------------------------------------
+    @property
+    def input_sharding(self) -> NamedSharding | None:
+        """How callers should place input batches: batch dim split over
+        the ``data`` axis (``None`` for unsharded / degraded programs —
+        callers skip the ``device_put``)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P("data"))
+
+    @property
+    def device_count(self) -> int:
+        """Devices this program actually executes on (1 when unsharded
+        or degraded)."""
+        return self.mesh.devices.size if self.mesh is not None else 1
+
+    @property
+    def mesh_str(self) -> str:
+        """``"4x2"``-style label of the *active* mesh (``"1"`` when
+        unsharded or degraded) — the span-attr form."""
+        if self.mesh is None:
+            return "1"
+        return f"{self.spec.mesh[0]}x{self.spec.mesh[1]}"
 
     # -- execution ----------------------------------------------------------
     def forward(self, params, x):
         """Replay the frozen layer records (traceable; donate to ``jit``
-        via :meth:`apply` or embed in a caller's trace)."""
+        via :meth:`apply` or embed in a caller's trace).  On a sharded
+        program this *is* the ``shard_map``-wrapped computation, so
+        embedding it in a caller's ``jit`` (e.g. the train step)
+        inherits the spec's layouts."""
+        if self.mesh is None:
+            return self._replay(params, x)
+        data_dim = self.spec.mesh[0]
+        if x.shape[0] % data_dim:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide over the data "
+                f"axis of {data_dim} (program "
+                f"{self.spec.model}/{self.spec.role} mesh "
+                f"{self.mesh_str})")
+        pspecs = {k: self._param_pspecs.get(k, P()) for k in params}
+        fn = _shard_map(self._replay, mesh=self.mesh,
+                        in_specs=(pspecs, P("data")),
+                        out_specs=P("data"))
+        return fn(params, x)
+
+    def _replay(self, params, x):
+        """The per-device layer replay (the whole computation when
+        unsharded; the shard-local body under ``shard_map`` when not).
+        Inside shard_map, ``x`` is the local batch shard and
+        ``"cout"``-layers' params are local Cout shards."""
         spec = self.spec
+        sharded = self.mesh is not None
         if spec.role == "generator":
             first = spec.layers[0]
             x = x @ params["proj_w"] + params["proj_b"]
@@ -91,6 +187,13 @@ class Program:
                             measured_us=le.measured_us):
                 x = op(x, w, le.strides, le.paddings, policy=policy,
                        blocks=le.blocks, bias=b, epilogue=le.epilogue)
+                if sharded and le.sharding == "cout":
+                    # each device computed cout/model output channels
+                    # (epilogue included — bias was sharded alongside);
+                    # restore full Cout for the next layer.  No halo:
+                    # Cout is a pure output dimension.
+                    x = jax.lax.all_gather(x, "model", axis=x.ndim - 1,
+                                           tiled=True)
         if spec.role == "discriminator":
             x = x.reshape(batch, -1).mean(axis=-1)
         return x
@@ -108,8 +211,9 @@ class Program:
             return self._apply(params, x)
         traces_before = self.traces
         with _obs.trace("program.apply", model=self.spec.model,
-                        role=self.spec.role,
-                        batch=int(x.shape[0])) as sp:
+                        role=self.spec.role, batch=int(x.shape[0]),
+                        devices=self.device_count,
+                        mesh=self.mesh_str) as sp:
             out = self._apply(params, x)
             sp.set(traced=self.traces > traces_before)
         return out
@@ -157,7 +261,8 @@ def build_bucket_programs(spec: ProgramSpec, buckets, *,
 def load_or_build(path, cfg, batch: int, role: str = "generator", *,
                   policy: DataflowPolicy | None = None, planner=None,
                   measure: bool = False, dtype: str = "float32",
-                  differentiable: bool = True) -> tuple[Program, bool]:
+                  differentiable: bool = True,
+                  mesh=_SPEC_UNSET) -> tuple[Program, bool]:
     """Load an exported program file, falling back to fresh resolution.
 
     Returns ``(program, loaded)``.  ``loaded=False`` means the file was
@@ -166,10 +271,15 @@ def load_or_build(path, cfg, batch: int, role: str = "generator", *,
     (topology / channel-scale / epilogue drift) — in every such case the
     program is rebuilt from ``cfg`` exactly as :meth:`Program.build`
     would, so a bad file degrades the optimization, never the service.
-    """
+
+    The mesh is deliberately **not** part of the workload identity: a
+    file exported with a mesh loads fine on a config without one (and
+    vice versa) — it is the file's frozen sharding decision that wins,
+    degrading to single-device if this process lacks the devices.
+    ``mesh`` only shapes the *fallback* rebuild."""
     fresh = ProgramSpec.build(cfg, batch, role, policy=policy,
                               planner=planner, measure=False,
-                              dtype=dtype)
+                              dtype=dtype, mesh=mesh)
     try:
         spec = ProgramSpec.load(path)
         if spec.geometry_signature() != fresh.geometry_signature():
@@ -181,6 +291,6 @@ def load_or_build(path, cfg, batch: int, role: str = "generator", *,
         if measure:   # the fallback still honors the warmup request
             fresh = ProgramSpec.build(cfg, batch, role, policy=policy,
                                       planner=planner, measure=True,
-                                      dtype=dtype)
+                                      dtype=dtype, mesh=mesh)
         return Program(fresh, differentiable=differentiable), False
     return Program(spec, differentiable=differentiable), True

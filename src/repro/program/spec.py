@@ -29,15 +29,23 @@ import os
 import jax
 
 from repro import obs as _obs
-from repro.core.dataflow import (DataflowPolicy, Epilogue,
+from repro.core.dataflow import (SHARDINGS, DataflowPolicy, Epilogue,
                                  available_backends, backend_supports,
                                  blocks_valid, resolve_execution)
 
-__all__ = ["LayerExec", "ProgramSpec", "PROGRAM_FORMAT_VERSION", "ROLES"]
+__all__ = ["LayerExec", "ProgramSpec", "PROGRAM_FORMAT_VERSION",
+           "SUPPORTED_PROGRAM_VERSIONS", "ROLES"]
 
-PROGRAM_FORMAT_VERSION = 1
+# Version 2 added the mesh/sharding fields; version-1 documents (no
+# mesh) still load with single-device defaults — see ``from_json``.
+PROGRAM_FORMAT_VERSION = 2
+SUPPORTED_PROGRAM_VERSIONS = (1, 2)
 
 ROLES = ("generator", "discriminator")
+
+# ``build(mesh=...)``'s "not passed" sentinel: None is a meaningful
+# value (force single-device even if cfg carries a mesh).
+_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +59,14 @@ class LayerExec:
     records where that resolution came from (``pinned`` / ``tuned`` /
     ``heuristic``) and ``measured_us`` the winning plan's wall-clock
     when it was tuned.
+
+    ``sharding`` is the layer's frozen mesh layout (one of
+    :data:`repro.core.dataflow.SHARDINGS`): ``"data"`` = batch split
+    over the ``data`` axis with replicated weights, ``"cout"`` =
+    weights additionally sharded on Cout over the ``model`` axis (the
+    local output is all-gathered back to full Cout).  Meaningful only
+    when the owning :class:`ProgramSpec` carries a mesh; always
+    ``"data"`` otherwise.
     """
 
     name: str
@@ -70,12 +86,16 @@ class LayerExec:
     blocks: tuple[int, ...] | None
     source: str                     # "pinned" | "tuned" | "heuristic"
     measured_us: float | None = None
+    sharding: str = "data"          # "data" | "cout"
 
     def __post_init__(self):
         if self.kind not in ("tconv", "conv"):
             raise ValueError(f"unknown layer kind {self.kind!r}")
         if self.source not in ("pinned", "tuned", "heuristic"):
             raise ValueError(f"unknown resolution source {self.source!r}")
+        if self.sharding not in SHARDINGS:
+            raise ValueError(f"unknown layer sharding "
+                             f"{self.sharding!r}; one of {SHARDINGS}")
         # constructing the epilogue validates activation/leaky_slope —
         # a corrupt program file must fail here, not at first trace
         Epilogue(bias=self.bias, activation=self.activation,
@@ -119,9 +139,10 @@ class LayerExec:
             exec_ += f"[{'x'.join(map(str, self.blocks))}]"
         us = "" if self.measured_us is None \
             else f"  {self.measured_us:.0f}us"
+        shard = "" if self.sharding == "data" else f"  @{self.sharding}"
         return (f"{self.name}: {self.kind} {sp} k{k} s{s} "
                 f"{self.cin}->{self.cout}  ep[{self.epilogue.describe()}]"
-                f"  -> {exec_}  ({self.source}{us})")
+                f"  -> {exec_}{shard}  ({self.source}{us})")
 
     def to_json(self) -> dict:
         d = {f.name: getattr(self, f.name)
@@ -134,7 +155,9 @@ class LayerExec:
     @classmethod
     def from_json(cls, d: dict) -> "LayerExec":
         names = {f.name for f in dataclasses.fields(cls)}
-        if not (names - {"measured_us"} <= set(d) <= names):
+        # measured_us and sharding are optional on input: version-1
+        # documents predate sharding and default to "data"
+        if not (names - {"measured_us", "sharding"} <= set(d) <= names):
             raise ValueError(f"bad layer fields: {sorted(d)}")
         d = dict(d)
         for f in ("in_spatial", "kernel", "strides", "paddings"):
@@ -176,6 +199,16 @@ class ProgramSpec:
     executes its recorded backends wherever it loads).
     ``requested_backend`` preserves the policy form the spec was built
     from (``None`` = heuristic), purely for display.
+
+    ``mesh`` freezes the device layout the program was resolved for:
+    ``(data, model)`` device counts over the ``("data", "model")`` axes
+    of :func:`repro.launch.mesh.make_local_mesh`, or ``None`` for a
+    single-device program.  The mesh is a property of the *program*,
+    not the call site — an exported meshed spec serves identically on
+    any box with enough devices, and degrades (with a warning) to
+    single-device where there aren't.  It is provenance-like but
+    executable, so it is excluded from :meth:`geometry_signature`: a
+    meshed program still serves the same workload.
     """
 
     model: str
@@ -187,6 +220,7 @@ class ProgramSpec:
     platform: str
     requested_backend: str | None
     layers: tuple[LayerExec, ...]
+    mesh: tuple[int, int] | None = None
 
     def __post_init__(self):
         if self.role not in ROLES:
@@ -194,12 +228,30 @@ class ProgramSpec:
                              f"one of {ROLES}")
         if not self.layers:
             raise ValueError("a program needs at least one layer")
+        if self.mesh is not None:
+            if (len(self.mesh) != 2
+                    or any(not isinstance(v, int) or v < 1
+                           for v in self.mesh)):
+                raise ValueError(f"mesh must be two positive ints "
+                                 f"(data, model), got {self.mesh!r}")
+        model_dim = self.mesh[1] if self.mesh else 1
+        for le in self.layers:
+            if le.sharding == "cout":
+                if model_dim <= 1:
+                    raise ValueError(
+                        f"layer {le.name!r} is Cout-sharded but the "
+                        f"program mesh {self.mesh!r} has no model axis")
+                if le.cout % model_dim:
+                    raise ValueError(
+                        f"layer {le.name!r} cout={le.cout} does not "
+                        f"divide over model axis of {model_dim}")
 
     # -- construction -------------------------------------------------------
     @classmethod
     def build(cls, cfg, batch: int, role: str = "generator", *,
               policy: DataflowPolicy | None = None, planner=None,
-              measure: bool = False, dtype: str = "float32"
+              measure: bool = False, dtype: str = "float32",
+              mesh=_UNSET, cout_shard_min_bytes: int | None = None
               ) -> "ProgramSpec":
         """Walk ``cfg``'s layers once and freeze every resolution.
 
@@ -208,6 +260,14 @@ class ProgramSpec:
         (``planner`` or the process-wide one); ``measure=True``
         additionally tunes plan misses — the ahead-of-time analogue of
         the old per-call warmup, and the only place measurement belongs.
+
+        ``mesh`` freezes a ``(data, model)`` device layout into the
+        spec (default: ``cfg.mesh``; pass ``None`` explicitly to force
+        single-device).  Each layer's sharding is chosen by the
+        footprint heuristic in
+        :func:`repro.core.dataflow.choose_layer_sharding`
+        (``cout_shard_min_bytes`` overrides its threshold — tests use
+        ``0`` to force Cout sharding on small configs).
         """
         from repro.models.gan import (discriminator_epilogues,
                                       generator_epilogues)
@@ -215,6 +275,11 @@ class ProgramSpec:
             raise ValueError(f"unknown program role {role!r}; "
                              f"one of {ROLES}")
         policy = policy or cfg.policy
+        if mesh is _UNSET:
+            mesh = getattr(cfg, "mesh", None)
+        if mesh is not None:
+            mesh = (int(mesh[0]), int(mesh[1]))
+        mesh_model = mesh[1] if mesh else 1
         g_layers, d_layers = cfg.layers
         if role == "generator":
             layers, prefix = g_layers, "t"
@@ -231,7 +296,9 @@ class ProgramSpec:
                 res = resolve_execution(
                     policy, kind, l.in_spatial, l.kernel, l.strides,
                     l.paddings, l.cin, l.cout, batch=batch, dtype=dtype,
-                    epilogue=ep, planner=planner, measure=measure)
+                    epilogue=ep, planner=planner, measure=measure,
+                    mesh_model=mesh_model,
+                    cout_shard_min_bytes=cout_shard_min_bytes)
                 records.append(LayerExec(
                     name=l.name, kind=kind,
                     in_spatial=tuple(l.in_spatial),
@@ -243,14 +310,15 @@ class ProgramSpec:
                     bias=ep.bias, activation=ep.activation,
                     leaky_slope=ep.leaky_slope,
                     backend=res.backend, blocks=res.blocks,
-                    source=res.source, measured_us=res.measured_us))
+                    source=res.source, measured_us=res.measured_us,
+                    sharding=res.sharding))
         _obs.counter("program.builds").inc()
         return cls(model=cfg.name, role=role, batch=int(batch),
                    z_dim=int(cfg.z_dim) if role == "generator" else None,
                    channel_scale=float(cfg.channel_scale), dtype=dtype,
                    platform=jax.default_backend(),
                    requested_backend=policy.backend,
-                   layers=tuple(records))
+                   layers=tuple(records), mesh=mesh)
 
     # -- queries ------------------------------------------------------------
     def plan_keys(self) -> list[tuple[str, object]]:
@@ -285,9 +353,11 @@ class ProgramSpec:
     def describe(self) -> str:
         """The human-readable program listing: header plus one line per
         frozen layer record."""
+        mesh = "" if self.mesh is None else \
+            f"mesh={self.mesh[0]}x{self.mesh[1]}  "
         head = (f"program {self.model}/{self.role}  "
                 f"batch={self.batch}  dtype={self.dtype}  "
-                f"platform={self.platform}  "
+                f"platform={self.platform}  {mesh}"
                 f"policy={self.requested_backend or 'heuristic'}  "
                 f"({len(self.layers)} layers)")
         return "\n".join([head] + [f"  {le.describe()}"
@@ -302,6 +372,7 @@ class ProgramSpec:
             "dtype": self.dtype, "platform": self.platform,
             "requested_backend": self.requested_backend,
             "layers": [le.to_json() for le in self.layers],
+            "mesh": list(self.mesh) if self.mesh else None,
         }
 
     @classmethod
@@ -309,13 +380,22 @@ class ProgramSpec:
         if not isinstance(doc, dict):
             raise ValueError(f"program doc must be a dict, got "
                              f"{type(doc).__name__}")
-        if doc.get("version") != PROGRAM_FORMAT_VERSION:
+        version = doc.get("version")
+        if version not in SUPPORTED_PROGRAM_VERSIONS:
             raise ValueError(f"unsupported program version "
-                             f"{doc.get('version')!r} "
-                             f"(want {PROGRAM_FORMAT_VERSION})")
+                             f"{version!r} "
+                             f"(want one of {SUPPORTED_PROGRAM_VERSIONS})")
         layers = doc.get("layers")
         if not isinstance(layers, list) or not layers:
             raise ValueError("program doc has no 'layers' list")
+        # version-gated defaults: v1 documents predate the mesh fields
+        # and mean a single-device program
+        mesh = doc.get("mesh") if version >= 2 else None
+        if mesh is not None:
+            if not isinstance(mesh, (list, tuple)) or len(mesh) != 2:
+                raise ValueError(f"program mesh must be [data, model], "
+                                 f"got {mesh!r}")
+            mesh = (int(mesh[0]), int(mesh[1]))
         z_dim = doc.get("z_dim")
         return cls(model=str(doc["model"]), role=str(doc["role"]),
                    batch=int(doc["batch"]),
@@ -324,7 +404,8 @@ class ProgramSpec:
                    dtype=str(doc.get("dtype", "float32")),
                    platform=str(doc.get("platform", "cpu")),
                    requested_backend=doc.get("requested_backend"),
-                   layers=tuple(LayerExec.from_json(d) for d in layers))
+                   layers=tuple(LayerExec.from_json(d) for d in layers),
+                   mesh=mesh)
 
     def save(self, path) -> None:
         """Atomically write the spec's JSON document to ``path``."""

@@ -53,6 +53,7 @@ from repro import obs as _obs
 from repro.core.dataflow import DataflowPolicy
 from repro.models.gan import GanConfig
 from repro.program import Program, ProgramSpec
+from repro.program.spec import _UNSET as _MESH_UNSET
 
 __all__ = ["GanServer"]
 
@@ -70,7 +71,7 @@ class GanServer:
     def __init__(self, cfg: GanConfig, g_params, batch_size: int = 8,
                  policy: DataflowPolicy | None = None, seed: int = 0,
                  warm_plans: bool = True,
-                 program: Program | None = None):
+                 program: Program | None = None, mesh=_MESH_UNSET):
         if int(batch_size) <= 0:
             raise ValueError(f"batch_size must be positive, "
                              f"got {batch_size}")
@@ -120,7 +121,18 @@ class GanServer:
             # and zero measurements when the plan cache is warm)
             self.program = Program.build(
                 cfg, self.batch_size, "generator", policy=self.policy,
-                measure=warm_plans, differentiable=False)
+                measure=warm_plans, differentiable=False, mesh=mesh)
+        if self.program.mesh is not None and \
+                self.batch_size % self.program.spec.mesh[0]:
+            raise ValueError(
+                f"batch_size {self.batch_size} does not divide over "
+                f"the program's data axis of "
+                f"{self.program.spec.mesh[0]} (mesh "
+                f"{self.program.mesh_str})")
+        # sharded programs want their input batch placed batch-split
+        # over the data axis before dispatch (None = single device,
+        # including the degraded-mesh case: skip the device_put)
+        self._in_sharding = self.program.input_sharding
         self._generate = self.program.apply
 
     # -- accounting (registry-backed; attribute API preserved) --------------
@@ -217,6 +229,8 @@ class GanServer:
             while remaining > 0:
                 z = jax.random.normal(self._next_key(),
                                       (self.batch_size, self.cfg.z_dim))
+                if self._in_sharding is not None:
+                    z = jax.device_put(z, self._in_sharding)
                 img = np.asarray(self._generate(self.params, z))
                 self._m_batches.inc()
                 batches += 1

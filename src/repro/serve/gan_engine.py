@@ -71,6 +71,7 @@ from repro import obs as _obs
 from repro.core.dataflow import DataflowPolicy
 from repro.models.gan import GanConfig
 from repro.program import Program, ProgramSpec, build_bucket_programs
+from repro.program.spec import _UNSET as _MESH_UNSET
 
 __all__ = ["GanEngine", "GanFuture", "ServerClosed", "DEFAULT_BUCKETS"]
 
@@ -206,7 +207,7 @@ class GanEngine:
                  warm_plans: bool = True, program: Program | None = None,
                  pipeline_depth: int = 1, max_pending: int | None = None,
                  warmup: bool = True, key=None,
-                 spare: np.ndarray | None = None):
+                 spare: np.ndarray | None = None, mesh=_MESH_UNSET):
         self.cfg = cfg
         self.params = g_params
         self.buckets = tuple(sorted({int(b) for b in buckets}))
@@ -243,9 +244,24 @@ class GanEngine:
         else:
             spec = ProgramSpec.build(cfg, self.buckets[-1], "generator",
                                      policy=self.policy,
-                                     measure=warm_plans)
+                                     measure=warm_plans, mesh=mesh)
         self.spec = spec
         self.programs = build_bucket_programs(spec, self.buckets)
+        # all bucket programs share the spec (and the local device
+        # count), so one probe answers for the whole set: the batch
+        # placement to device_put with (None when unsharded — including
+        # the degraded-mesh case) and the span-attr mesh identity
+        probe = self.programs[self.buckets[0]]
+        self._in_sharding = probe.input_sharding
+        self._devices = probe.device_count
+        self._mesh_str = probe.mesh_str
+        if probe.mesh is not None:
+            bad = [b for b in self.buckets if b % spec.mesh[0]]
+            if bad:
+                raise ValueError(
+                    f"buckets {bad} do not divide over the program's "
+                    f"data axis of {spec.mesh[0]} (mesh "
+                    f"{probe.mesh_str})")
 
         self.engine_id = f"{cfg.name}#{next(_ENGINE_SEQ)}"
         labels = {"engine": self.engine_id}
@@ -283,8 +299,10 @@ class GanEngine:
         if warmup:
             z0 = np.zeros((1, cfg.z_dim), np.float32)
             for b, prog in self.programs.items():
-                jax.block_until_ready(prog.apply(
-                    g_params, np.broadcast_to(z0, (b, cfg.z_dim))))
+                z = np.broadcast_to(z0, (b, cfg.z_dim))
+                if self._in_sharding is not None:
+                    z = jax.device_put(z, self._in_sharding)
+                jax.block_until_ready(prog.apply(g_params, z))
 
         self._thread = threading.Thread(
             target=self._run, name=f"gan-engine-{self.engine_id}",
@@ -517,7 +535,8 @@ class GanEngine:
                 self._m_request_us.observe(fut.latency_us)
             _obs.emit_span("engine.request", fut._t0_us,
                            engine=self.engine_id, n=fut.n,
-                           offset=fut.offset)
+                           offset=fut.offset, devices=self._devices,
+                           mesh=self._mesh_str)
             self._cv.notify_all()       # backpressure: queue slot freed
 
     def _next_key(self):
@@ -527,6 +546,8 @@ class GanEngine:
     def _dispatch(self, batch: _Batch) -> None:
         z = jax.random.normal(self._next_key(),
                               (batch.size, self.cfg.z_dim))
+        if self._in_sharding is not None:
+            z = jax.device_put(z, self._in_sharding)
         # async dispatch: returns a device future, does not block
         batch.dev = self.programs[batch.size].apply(self.params, z)
         self._m_generated.inc(batch.size)

@@ -25,6 +25,7 @@ from typing import Any, Callable
 import jax
 
 from repro import obs as _obs
+from repro.program.spec import _UNSET as _MESH_UNSET
 from repro.train import checkpoint as ckpt
 
 __all__ = ["LoopConfig", "TrainLoop", "InjectedFailure",
@@ -33,7 +34,8 @@ __all__ = ["LoopConfig", "TrainLoop", "InjectedFailure",
 
 def make_gan_train_step(cfg, batch: int, *, g_lr: float = 2e-4,
                         d_lr: float | None = None, policy=None,
-                        planner=None, measure: bool = False):
+                        planner=None, measure: bool = False,
+                        mesh=_MESH_UNSET):
     """Program-backed adversarial SGD step for a ``GanConfig``.
 
     Builds the generator and discriminator
@@ -44,15 +46,29 @@ def make_gan_train_step(cfg, batch: int, *, g_lr: float = 2e-4,
     ``((g_params, d_params), {"z", "real"}) → (state, metrics)`` that
     replays the frozen programs every step.  ``measure=True`` tunes
     plan misses at build for an ``auto`` policy (never during the
-    loop)."""
+    loop).
+
+    ``mesh`` (default: ``cfg.mesh``) builds **sharded** programs: the
+    programs' forwards run under ``shard_map``, so the batch splits
+    over the ``data`` axis and the weight cotangents are ``psum``-med
+    across it by the shard_map transpose — data-parallel gradient
+    reduction with no explicit ``pmean`` in the loss.  The returned
+    step then ``device_put``s each incoming batch array with
+    :func:`repro.sharding.rules.batch_sharding` (batch dim over
+    ``data``), and exposes ``train_step.state_shardings`` — a
+    ``(g, d)`` pair of replicated :func:`~repro.sharding.rules
+    .param_shardings` trees — for placing the initial state and for
+    :class:`TrainLoop`'s checkpoint-restore ``state_shardings``.
+    Degrades with the programs: too few local devices → a plain
+    single-device step."""
     from repro.models.gan import bce_with_logits
     from repro.program import Program
 
     d_lr = g_lr if d_lr is None else d_lr
     g_prog = Program.build(cfg, batch, "generator", policy=policy,
-                           planner=planner, measure=measure)
+                           planner=planner, measure=measure, mesh=mesh)
     d_prog = Program.build(cfg, batch, "discriminator", policy=policy,
-                           planner=planner, measure=measure)
+                           planner=planner, measure=measure, mesh=mesh)
 
     def losses(g_params, d_params, z, real):
         fake = g_prog.forward(g_params, z)
@@ -78,6 +94,40 @@ def make_gan_train_step(cfg, batch: int, *, g_lr: float = 2e-4,
         return (g_new, d_new), {"g_loss": gl, "d_loss": dl,
                                 "loss": gl + dl}
 
+    if g_prog.mesh is not None:
+        from repro.models.gan import (discriminator_specs,
+                                      generator_specs)
+        from repro.sharding.rules import (Rules, batch_sharding,
+                                          param_shardings)
+        mesh_obj = g_prog.mesh
+
+        # GAN data-parallel state is fully replicated (the programs'
+        # own shard_map in_specs do the Cout splitting where frozen) —
+        # a Rules table mapping every param axis to no mesh axis.
+        dp_rules = Rules(table={"conv_in": None, "conv_out": None,
+                                "mlp": None})
+
+        def _shardings(specs):
+            return param_shardings(
+                mesh_obj, {k: s.axes for k, s in specs.items()},
+                {k: jax.ShapeDtypeStruct(s.shape, "float32")
+                 for k, s in specs.items()}, dp_rules)
+
+        inner_step = train_step
+
+        def train_step(state, batch):
+            batch = {k: jax.device_put(
+                         v, batch_sharding(mesh_obj,
+                                           getattr(v, "ndim", 0)))
+                     for k, v in batch.items()}
+            return inner_step(state, batch)
+
+        train_step.mesh = mesh_obj
+        train_step.state_shardings = (_shardings(generator_specs(cfg)),
+                                      _shardings(discriminator_specs(cfg)))
+    else:
+        train_step.mesh = None
+        train_step.state_shardings = None
     return train_step, (g_prog, d_prog)
 
 

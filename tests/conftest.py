@@ -1,9 +1,46 @@
 import os
+import subprocess
+import sys
+import textwrap
 
-# Tests see the single real CPU device (the dry-run sets its own
-# XLA_FLAGS in subprocesses; see tests/test_distributed.py).
+# Tests see the single real CPU device (multi-device tests run in
+# subprocesses via run_forced_devices below; XLA locks the device count
+# at first init, so the forcing flag must be set in a fresh process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Prepended to every forced-device snippet: sets the device-forcing
+# flag *before* jax initializes, plus the imports every multi-device
+# test wants.  The {n} placeholder is filled by run_forced_devices.
+MULTIDEVICE_HEADER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = \\
+        "--xla_force_host_platform_device_count={n}"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+""")
+
+
+def run_forced_devices(code: str, n_devices: int = 8, timeout=600):
+    """Run ``code`` in a subprocess that sees ``n_devices`` forced host
+    CPU devices; the snippet must ``print("PASS")`` on success.
+
+    The shared form of the boilerplate previously duplicated across
+    test_distributed / test_collective_matmul / test_hlo: device count
+    locks at first jax init, so the main pytest process keeps its
+    single real CPU device and every multi-device scenario gets a
+    fresh interpreter with ``XLA_FLAGS`` set ahead of the import."""
+    full = MULTIDEVICE_HEADER.format(n=int(n_devices)) + \
+        textwrap.dedent(code)
+    out = subprocess.run(
+        [sys.executable, "-c", full], capture_output=True, text=True,
+        timeout=timeout, cwd=ROOT,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
+    assert "PASS" in out.stdout, (out.stdout[-1500:], out.stderr[-3000:])
+    return out

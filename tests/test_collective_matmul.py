@@ -1,30 +1,12 @@
 """Ring collective-matmul (comm/compute overlap) vs dense references."""
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(code: str, timeout=600):
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        timeout=timeout, cwd=ROOT,
-        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
-    assert "PASS" in out.stdout, (out.stdout[-1500:], out.stderr[-3000:])
+from conftest import run_forced_devices
 
 
 @pytest.mark.slow
 def test_ring_matmuls_match_dense():
-    _run(textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding
+    run_forced_devices("""
         from repro.sharding.collective_matmul import (
             ring_allgather_matmul, ring_matmul_reducescatter)
         for shape, axes, ax in [((2, 4), ("data", "model"), "model"),
@@ -51,4 +33,4 @@ def test_ring_matmuls_match_dense():
                                        np.asarray(x2 @ w2),
                                        atol=1e-4, rtol=1e-4)
         print("PASS")
-    """))
+    """)

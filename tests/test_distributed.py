@@ -1,35 +1,14 @@
 """Distribution: sharding rules, flash-decode, elastic checkpoint restore.
 
 Multi-device tests run in subprocesses (XLA locks the device count at
-first init; the main test process keeps the single real CPU device).
+first init; the main test process keeps the single real CPU device) via
+the shared ``conftest.run_forced_devices`` helper.
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
+from conftest import run_forced_devices
 
 from repro.sharding.rules import Rules, spec_for_axes
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(code: str, timeout=600):
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        timeout=timeout, cwd=ROOT,
-        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
-    assert "PASS" in out.stdout, (out.stdout[-1500:], out.stderr[-3000:])
-
-
-HEADER = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import PartitionSpec as P, NamedSharding
-""")
 
 
 class TestRules:
@@ -64,7 +43,7 @@ class TestRules:
 
 @pytest.mark.slow
 def test_flash_decode_matches_dense():
-    _run(HEADER + textwrap.dedent("""
+    run_forced_devices("""
         from repro.models.attention import decode_attention, flash_decode
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(0)
@@ -80,14 +59,14 @@ def test_flash_decode_matches_dense():
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    atol=2e-5, rtol=2e-5)
         print("PASS")
-    """))
+    """)
 
 
 @pytest.mark.slow
 def test_small_mesh_train_step_lowering():
     """End-to-end distributed lowering on 8 fake devices: a small model's
     train_step compiles with FSDP+TP shardings and runs one real step."""
-    _run(HEADER + textwrap.dedent("""
+    run_forced_devices("""
         import dataclasses
         from repro.configs.base import get_config
         from repro.models import transformer as tr
@@ -117,14 +96,14 @@ def test_small_mesh_train_step_lowering():
             state, m = jit_step(state, {"tokens": toks})
         assert np.isfinite(float(m["total_loss"]))
         print("PASS")
-    """))
+    """)
 
 
 @pytest.mark.slow
 def test_elastic_checkpoint_reshard():
     """Save on a (4,2) mesh, restore on (2,2) and on (8,) — global values
     must be identical (elastic scaling contract)."""
-    _run(HEADER + textwrap.dedent("""
+    run_forced_devices("""
         import tempfile
         from repro.train import checkpoint as ckpt
         d = tempfile.mkdtemp()
@@ -142,14 +121,14 @@ def test_elastic_checkpoint_reshard():
                                           np.asarray(x))
             assert out["w"].sharding.spec == spec
         print("PASS")
-    """))
+    """)
 
 
 @pytest.mark.slow
 def test_gradient_compression_dcn_equivalence():
     """int8-compressed gradient sync converges like uncompressed on a
     2-pod mesh (pure-DP toy model)."""
-    _run(HEADER + textwrap.dedent("""
+    run_forced_devices("""
         from repro.train.compress import make_int8_grad_transform
         rng = np.random.default_rng(0)
         w = jnp.zeros((16,))
@@ -171,4 +150,4 @@ def test_gradient_compression_dcn_equivalence():
         assert float(loss(w_c)) < 5e-2, float(loss(w_c))
         assert abs(float(loss(w_c)) - float(loss(w_u))) < 1e-3
         print("PASS")
-    """))
+    """)

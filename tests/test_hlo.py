@@ -1,10 +1,9 @@
 """HLO cost parser: trip-count multipliers, dot/conv FLOPs, collectives."""
 
-import subprocess
-import sys
 import textwrap
 
 import pytest
+from conftest import run_forced_devices
 
 from repro.utils.hlo import _shape_bytes, analyze_hlo
 
@@ -68,11 +67,7 @@ def test_shape_bytes():
 def test_parser_matches_unrolled_reference():
     """End-to-end: a scanned model parsed with trip counts must agree with
     the same model unrolled (run in a subprocess with 8 fake devices)."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding
+    run_forced_devices("""
         from repro.utils.hlo import analyze_hlo
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         L, D, B = 6, 128, 16
@@ -95,12 +90,5 @@ def test_parser_matches_unrolled_reference():
             res.append(analyze_hlo(c.as_text(), pod_stride=8).flops)
         assert abs(res[0] - res[1]) / res[1] < 0.05, res
         assert abs(res[1] - 2 * (B // 2) * D * (D // 4) * L) / res[1] < 0.05
-        print("OK")
+        print("PASS")
     """)
-    import os
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=600, cwd=root,
-                         env=dict(os.environ,
-                                  PYTHONPATH=os.path.join(root, "src")))
-    assert "OK" in out.stdout, out.stderr[-2000:]
