@@ -31,6 +31,7 @@ from repro.configs.gans import GAN_MODELS
 from repro.core.dataflow import (DataflowPolicy, Epilogue,
                                  available_backends, tconv,
                                  uop_cache_info)
+from repro.core.tconv import tconv_output_shape
 
 DEFAULT_BACKENDS = ("polyphase", "zero-insert")
 
@@ -184,6 +185,94 @@ def bench_program(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
     return rows
 
 
+def bench_precision(models=("dcgan", "3dgan"), batch=2,
+                    channel_scale=0.25, repeats=5,
+                    backend="polyphase"):
+    """Storage-precision rows (repro.quant): the bf16 generator
+    executable and the int8-weight deploy path, plus analytic HBM
+    traffic at each precision.
+
+    Emits per model:
+
+    * ``generator_bf16_us`` — the full generator forward with
+      ``dtype="bfloat16"`` storage (f32 accumulation inside the op).
+      Gated in CI like ``program_us``: the low-precision path must not
+      regress.  On CPU XLA bf16 is usually emulated, so the row tracks
+      "does the bf16 program stay runnable and sane", not a memory-BW
+      win — that is what the analytic byte rows are for.
+    * ``generator_int8_us`` — the int8-weight export served end to end:
+      ``quantize_program`` → JSON round-trip → ``Program`` (weights
+      dequantized into bf16 storage at load) → forward (informational).
+    * ``hbm_bytes_f32`` / ``hbm_bytes_bf16`` / ``hbm_bytes_int8`` —
+      analytic per-forward HBM traffic (weights + biases + layer
+      in/out activations, batch included): storage itemsize per
+      element, except int8 weights at 1 B + one f32 scale per output
+      channel, and biases always f32 (the accumulator precision).
+      Deterministic (no timing), informational — they document the
+      compression the storage dtype buys on a memory-bound forward."""
+    import json as _json
+
+    from repro.models.gan import GanConfig, init_gan
+    from repro.program import Program
+    from repro.program.spec import ProgramSpec
+    from repro.quant import quantize_program, storage_itemsize
+
+    rows = []
+    print(f"\n== microbench: storage precision ({backend}, "
+          f"batch={batch}, channels×{channel_scale}) ==")
+    for name in models:
+        cfg32 = GanConfig(name=name, channel_scale=channel_scale,
+                          backend=backend)
+        cfgbf = GanConfig(name=name, channel_scale=channel_scale,
+                          backend=backend, dtype="bfloat16")
+        g_params, _ = init_gan(cfg32, jax.random.PRNGKey(0))
+        z = jnp.asarray(np.random.default_rng(0).normal(
+            size=(batch, cfg32.z_dim)), jnp.float32)
+
+        prog_bf = Program.build(cfgbf, batch, "generator")
+        t_bf = _time(prog_bf.apply, g_params, z, iters=repeats)
+        rows.append((f"micro/{name}/generator_bf16_us", t_bf * 1e6,
+                     "bf16 storage, f32 accumulation; gated"))
+
+        # int8 deploy: export → JSON round-trip → dequantize-at-load
+        spec_q = ProgramSpec.from_json(_json.loads(_json.dumps(
+            quantize_program(prog_bf.spec, g_params).to_json())))
+        prog_q = Program(spec_q)
+        t_q = _time(prog_q.apply, prog_q.params, z, iters=repeats)
+        rows.append((f"micro/{name}/generator_int8_us", t_q * 1e6,
+                     "int8-weight export served (informational)"))
+
+        # analytic HBM traffic per forward at each precision
+        g_layers, _ = cfgbf.layers
+        for label, wsize, asize, int8 in (("f32", 4, 4, False),
+                                          ("bf16", 2, 2, False),
+                                          ("int8", 1, 2, True)):
+            total = 0
+            for l in g_layers:
+                taps = int(np.prod(np.asarray(l.kernel)))
+                w_el = taps * l.cin * l.cout
+                total += w_el * (1 if int8 else wsize)
+                if int8:
+                    total += 4 * l.cout            # per-channel scales
+                total += 4 * l.cout                # bias, always f32
+                out_sp = tconv_output_shape(
+                    (batch, *l.in_spatial, l.cin),
+                    (*l.kernel, l.cin, l.cout), l.strides, l.paddings
+                )[1:-1] if l.transposed else l.conv_out_spatial()
+                total += batch * asize * (
+                    int(np.prod(np.asarray(l.in_spatial))) * l.cin +
+                    int(np.prod(np.asarray(out_sp))) * l.cout)
+            rows.append((f"micro/{name}/hbm_bytes_{label}", float(total),
+                         "analytic per-forward traffic"))
+        f32b = rows[-3][1]
+        print(f"  {name:8s} bf16={t_bf*1e3:7.2f}ms  int8={t_q*1e3:7.2f}ms"
+              f"  bytes f32={f32b/1e6:6.2f}MB"
+              f"  bf16={rows[-2][1]/1e6:6.2f}MB"
+              f"  int8={rows[-1][1]/1e6:6.2f}MB")
+    assert storage_itemsize("bfloat16") == 2   # the asize=2 rows above
+    return rows
+
+
 def bench_obs_overhead(models=("dcgan",), batch=2,
                        channel_scale=0.25, repeats=5,
                        backend="polyphase"):
@@ -285,6 +374,8 @@ def run_all(models=("dcgan", "3dgan"), batch=2, channel_scale=0.25,
     rows += bench_fused_epilogue(models, batch, channel_scale,
                                  repeats=repeats)
     rows += bench_program(models, batch, channel_scale, repeats=repeats)
+    rows += bench_precision(models, batch, channel_scale,
+                            repeats=repeats)
     # first model only: the quickest apply bounds the fixed wrapper
     # cost tightest (see bench_obs_overhead)
     rows += bench_obs_overhead(models[:1], batch, channel_scale,

@@ -138,16 +138,24 @@ class Epilogue:
     def apply(self, y: jax.Array, bias: jax.Array | None = None
               ) -> jax.Array:
         """Reference (pure-JAX) application — the function the kernel
-        backends fuse into their flush step."""
+        backends fuse into their flush step.
+
+        Computed in float32 and cast back to ``y.dtype``, mirroring the
+        kernels' f32-accumulator flush: with low-precision storage the
+        bias add and activation never run in the narrow type (a bf16
+        ``y + f32 bias`` would otherwise also silently promote the
+        layer output to f32).  Bit-neutral for f32 inputs."""
+        dt = y.dtype
+        y = y.astype(jnp.float32)
         if self.bias:
-            y = y + bias
+            y = y + bias.astype(jnp.float32)
         if self.activation == "relu":
             y = jax.nn.relu(y)
         elif self.activation == "leaky_relu":
             y = jax.nn.leaky_relu(y, self.leaky_slope)
         elif self.activation == "tanh":
             y = jnp.tanh(y)
-        return y
+        return y.astype(dt)
 
     def grad_from_output(self, y: jax.Array) -> jax.Array:
         """The activation derivative recovered from the saved *output*
@@ -749,8 +757,12 @@ def _epilogue_cotangent(epilogue: Epilogue, y, g):
 
 
 def _bias_grad(g_pre, bias):
+    # f32 accumulation: the reduction spans batch x spatial elements,
+    # far too many to sum in a 8/10-bit mantissa when g_pre is stored
+    # low-precision (no-op for f32 cotangents)
     axes = tuple(range(g_pre.ndim - 1))
-    return jnp.sum(g_pre, axis=axes).astype(bias.dtype)
+    return jnp.sum(g_pre, axis=axes,
+                   dtype=jnp.float32).astype(bias.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
@@ -842,22 +854,27 @@ COUT_SHARD_MIN_BYTES = 16 * 1024 * 1024
 
 def choose_layer_sharding(kernel: Sequence[int], cin: int, cout: int,
                           mesh_model: int, *,
-                          min_bytes: int | None = None) -> str:
+                          min_bytes: int | None = None,
+                          itemsize: int = 4) -> str:
     """The footprint heuristic picking one of :data:`SHARDINGS` for a
     layer resolved against a mesh with ``mesh_model`` devices on the
     ``model`` axis.
 
     ``"cout"`` (weights sharded on Cout, no halo exchange) is chosen
     only when the model axis is real (> 1), Cout divides it evenly, and
-    the f32 weight footprint ``prod(kernel)·cin·cout·4`` reaches
+    the weight footprint ``prod(kernel)·cin·cout·itemsize`` reaches
     ``min_bytes`` (default :data:`COUT_SHARD_MIN_BYTES`) — the layers
-    that outgrow a single device's memory/bandwidth.  Everything else
-    (including every layer of a mesh-less program) is ``"data"``."""
+    that outgrow a single device's memory/bandwidth.  ``itemsize`` is
+    the *storage* dtype's (a bf16 program's weights are half the f32
+    footprint, so fewer of its layers clear the sharding threshold).
+    Everything else (including every layer of a mesh-less program) is
+    ``"data"``."""
     if mesh_model <= 1 or cout % mesh_model != 0:
         return "data"
     threshold = COUT_SHARD_MIN_BYTES if min_bytes is None \
         else int(min_bytes)
-    weight_bytes = int(np.prod(tuple(kernel))) * int(cin) * int(cout) * 4
+    weight_bytes = int(np.prod(tuple(kernel))) * int(cin) * int(cout) \
+        * int(itemsize)
     return "cout" if weight_bytes >= threshold else "data"
 
 
@@ -923,7 +940,8 @@ def resolve_execution(policy: DataflowPolicy, kind: str,
             planner=planner, measure=measure)
         sharding = choose_layer_sharding(
             kernel, cin, cout, mesh_model,
-            min_bytes=cout_shard_min_bytes)
+            min_bytes=cout_shard_min_bytes,
+            itemsize=np.dtype(str(dtype)).itemsize)
         if sharding != res.sharding:
             res = dataclasses.replace(res, sharding=sharding)
         if sharding == "cout" and res.blocks is not None and \

@@ -54,6 +54,28 @@ def _dim_numbers(nd: int):
                                       (lhs, rhs, out))
 
 
+def accum_conv(lhs: jax.Array, rhs: jax.Array, *, window_strides,
+               padding, dimension_numbers,
+               preferred_element_type=jnp.float32) -> jax.Array:
+    """``conv_general_dilated`` with true f32 accumulation at any
+    storage precision.
+
+    Low-precision (bf16/f16) operands are **upcast** to the accumulator
+    dtype instead of passing narrow inputs with
+    ``preferred_element_type`` — the result is bit-identical (narrow
+    floats are exactly representable in f32), but unlike the
+    mixed-dtype form the conv's *transpose* is defined, so native
+    autodiff through the pure-JAX backends works at every storage
+    precision.  f32 operands pass through untouched."""
+    if preferred_element_type is not None:
+        acc = jnp.dtype(preferred_element_type)
+        lhs, rhs = lhs.astype(acc), rhs.astype(acc)
+    return lax.conv_general_dilated(
+        lhs, rhs, window_strides=window_strides, padding=padding,
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=preferred_element_type)
+
+
 def tconv_output_shape(x_shape: Sequence[int], w_shape: Sequence[int],
                        strides: Sequence[int], paddings: Sequence[int]
                        ) -> tuple[int, ...]:
@@ -98,7 +120,7 @@ def tconv_zero_insert(x: jax.Array, w: jax.Array, strides: Sequence[int],
     # Correlate with the *flipped* kernel; pad by (k - 1 - p) per side.
     w_flipped = jnp.flip(w, axis=tuple(range(nd)))
     pads = tuple((k - 1 - p, k - 1 - p) for k, p in zip(kernel, paddings))
-    return lax.conv_general_dilated(
+    return accum_conv(
         expanded, w_flipped, window_strides=(1,) * nd, padding=pads,
         dimension_numbers=_dim_numbers(nd),
         preferred_element_type=preferred_element_type,
@@ -128,7 +150,7 @@ def _phase_conv(x: jax.Array, w: jax.Array, sched: PhaseSchedule,
         pad_lo = n - 1 - m
         pad_hi = pd.out_size - in_size + m
         pads.append((pad_lo, pad_hi))
-    return lax.conv_general_dilated(
+    return accum_conv(
         x, w_sub, window_strides=(1,) * nd, padding=tuple(pads),
         dimension_numbers=_dim_numbers(nd),
         preferred_element_type=preferred_element_type)

@@ -10,9 +10,8 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.tconv import _dim_numbers, tconv_zero_insert
+from repro.core.tconv import _dim_numbers, accum_conv, tconv_zero_insert
 
 __all__ = ["tconv_ref", "conv_ref"]
 
@@ -33,7 +32,9 @@ def conv_ref(x: jax.Array, w: jax.Array, strides: Sequence[int],
     symmetric padding p."""
     nd = x.ndim - 2
     pads = tuple((p, p) for p in paddings)
-    return lax.conv_general_dilated(
+    # accum_conv: f32 accumulation with a defined transpose at every
+    # storage precision (see core/tconv.py)
+    return accum_conv(
         x, w, window_strides=tuple(strides), padding=pads,
         dimension_numbers=_dim_numbers(nd),
         preferred_element_type=jnp.float32).astype(x.dtype)

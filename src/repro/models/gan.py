@@ -77,6 +77,18 @@ class GanConfig:
     # by default (see ProgramSpec.build); None = single-device.  A
     # tuple so the config stays hashable for the program cache.
     mesh: tuple[int, int] | None = None
+    # Storage precision of programs built from this config: "float32",
+    # "bfloat16", or "float16" (aliases f32/bf16/f16 accepted and
+    # canonicalized, keeping the config hashable).  Accumulation is
+    # always float32 — see repro.quant.  Parameters themselves stay in
+    # whatever dtype the optimizer holds (f32 from init_gan): programs
+    # cast at use, so mixed-precision training needs no config beyond
+    # this field.
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        from repro.quant.precision import canonical_dtype
+        object.__setattr__(self, "dtype", canonical_dtype(self.dtype))
 
     @property
     def policy(self) -> DataflowPolicy:

@@ -8,6 +8,8 @@ Typical use::
         --plans plans.json --export dcgan-program.json
     PYTHONPATH=src python -m repro.program dcgan --load dcgan-program.json
     PYTHONPATH=src python -m repro.program dcgan --backend auto --stats
+    PYTHONPATH=src python -m repro.program dcgan --dtype bf16 \
+        --quantize int8 --export dcgan-int8.json
 
 The first form is the CI smoke: resolving the whole spec touches no
 arrays and runs no jit — a broken resolution path fails fast and cheap.
@@ -46,6 +48,18 @@ def main(argv=None) -> int:
                          "the footprint heuristic; the exported file "
                          "degrades to single-device on boxes without "
                          "the devices)")
+    ap.add_argument("--dtype", default=None,
+                    help="storage precision frozen into the spec: "
+                         "float32 (default), bfloat16, or float16 "
+                         "(aliases f32/bf16/f16 accepted); "
+                         "accumulation is always f32")
+    ap.add_argument("--quantize", default=None, choices=("int8",),
+                    help="with --export: embed per-channel symmetric "
+                         "int8 weights (+ f32 scales) in the program "
+                         "file, from a seed-0 init of the model (the "
+                         "export-transform demo flow; real deployments "
+                         "call repro.quant.quantize_program on trained "
+                         "params)")
     ap.add_argument("--backend", default=None,
                     help="policy backend (a registered name, 'pallas', "
                          f"or 'auto'; registered: "
@@ -94,8 +108,15 @@ def main(argv=None) -> int:
         except ValueError:
             ap.error(f"--mesh wants DATAxMODEL (e.g. 4x2), "
                      f"got {args.mesh!r}")
-    cfg = GanConfig(name=args.model, channel_scale=args.channel_scale,
-                    backend=args.backend, mesh=mesh)
+    try:
+        cfg = GanConfig(name=args.model,
+                        channel_scale=args.channel_scale,
+                        backend=args.backend, mesh=mesh,
+                        dtype=args.dtype or "float32")
+    except ValueError as e:
+        ap.error(str(e))
+    if args.quantize and not args.export:
+        ap.error("--quantize only makes sense with --export")
     roles = (args.role,) if args.role != "both" \
         else ("generator", "discriminator")
     if args.load and args.role == "both":
@@ -122,8 +143,19 @@ def main(argv=None) -> int:
                                      measure=args.measure)
         print(spec.describe())
         if args.export and not exported:
+            if args.quantize:
+                import jax
+
+                from repro.models.gan import init_gan
+                from repro.quant import quantize_program
+                g_params, d_params = init_gan(cfg, jax.random.PRNGKey(0))
+                params = g_params if spec.role == "generator" \
+                    else d_params
+                spec = quantize_program(spec, params)
             spec.save(args.export)
-            print(f"wrote {args.export}")
+            print(f"wrote {args.export}"
+                  + (" (int8 weights embedded)" if args.quantize
+                     else ""))
             exported = True
         if role != roles[-1]:
             print()

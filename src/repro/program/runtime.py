@@ -16,6 +16,7 @@ import logging
 import warnings
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -56,12 +57,19 @@ class Program:
     """
 
     def __init__(self, spec: ProgramSpec, *, differentiable: bool = True):
+        from repro.quant.precision import storage_dtype
         self.spec = spec
         self.differentiable = bool(differentiable)
         self._policies = tuple(
             DataflowPolicy(backend=le.backend,
                            differentiable=self.differentiable)
             for le in spec.layers)
+        # the storage precision every activation/weight is cast to at
+        # use (f32 = no-op); params may stay f32 in the caller's
+        # optimizer — the cast is inside the trace, so gradients flow
+        # back to the parameter dtype (mixed-precision training)
+        self._storage = storage_dtype(spec.dtype)
+        self._dequantized = None
         self.traces = 0
         self.mesh = None
         if spec.mesh is not None:
@@ -105,7 +113,7 @@ class Program:
     @classmethod
     def build(cls, cfg, batch: int, role: str = "generator", *,
               policy: DataflowPolicy | None = None, planner=None,
-              measure: bool = False, dtype: str = "float32",
+              measure: bool = False, dtype: str | None = None,
               differentiable: bool = True, mesh=_SPEC_UNSET,
               cout_shard_min_bytes: int | None = None) -> "Program":
         """:meth:`ProgramSpec.build` + wrap — the one-call form."""
@@ -114,6 +122,29 @@ class Program:
                                  dtype=dtype, mesh=mesh,
                                  cout_shard_min_bytes=cout_shard_min_bytes)
         return cls(spec, differentiable=differentiable)
+
+    # -- embedded (quantized) parameters ------------------------------------
+    @property
+    def quantized(self) -> bool:
+        """True when the spec carries an embedded int8 weight payload
+        (an exported quantized program)."""
+        return self.spec.quantized_params is not None
+
+    @property
+    def params(self):
+        """The spec's embedded int8 payload dequantized into the
+        storage dtype (weights → ``spec.dtype``, biases → f32),
+        materialized once per Program and deterministic across loads —
+        the tree callers hand straight to :meth:`apply` /
+        ``GanServer``.  ``None`` for ordinary programs, whose params
+        live with the caller."""
+        if self.spec.quantized_params is None:
+            return None
+        if self._dequantized is None:
+            from repro.quant.weights import dequantize_params
+            self._dequantized = dequantize_params(
+                self.spec.quantized_params, self.spec.dtype)
+        return self._dequantized
 
     # -- sharding queries ---------------------------------------------------
     @property
@@ -165,18 +196,29 @@ class Program:
         """The per-device layer replay (the whole computation when
         unsharded; the shard-local body under ``shard_map`` when not).
         Inside shard_map, ``x`` is the local batch shard and
-        ``"cout"``-layers' params are local Cout shards."""
+        ``"cout"``-layers' params are local Cout shards.
+
+        The spec's storage precision is applied here: inputs and
+        weights are cast to ``spec.dtype`` at use, the projection
+        contracts with an f32 accumulator (``preferred_element_type``,
+        matching the conv backends' f32 scratch), and biases stay f32
+        into the fused epilogues.  Bit-identical to the historic path
+        for f32 specs."""
         spec = self.spec
+        sd = self._storage
         sharded = self.mesh is not None
+        x = x.astype(sd)
         if spec.role == "generator":
             first = spec.layers[0]
-            x = x @ params["proj_w"] + params["proj_b"]
+            x = jnp.dot(x, params["proj_w"].astype(sd),
+                        preferred_element_type=jnp.float32)
+            x = x + params["proj_b"].astype(jnp.float32)
             x = x.reshape((x.shape[0],) + first.in_spatial
                           + (first.cin,))
-            x = jax.nn.relu(x)
+            x = jax.nn.relu(x).astype(sd)
         batch = x.shape[0]
         for le, policy in zip(spec.layers, self._policies):
-            w = params[le.w_param]
+            w = params[le.w_param].astype(sd)
             b = params[le.b_param] if le.bias else None
             op = df_tconv if le.kind == "tconv" else df_conv
             # Host-side span: under jit this records *trace* time (how
@@ -195,7 +237,10 @@ class Program:
                     x = jax.lax.all_gather(x, "model", axis=x.ndim - 1,
                                            tiled=True)
         if spec.role == "discriminator":
-            x = x.reshape(batch, -1).mean(axis=-1)
+            # logits reduce in f32 (a bf16 mean over every pixel would
+            # lose the signal) and *stay* f32 — losses are always
+            # computed at full precision
+            x = x.reshape(batch, -1).mean(axis=-1, dtype=jnp.float32)
         return x
 
     def apply(self, params, x):
@@ -226,9 +271,11 @@ class Program:
         self.spec.save(path)
 
     def __repr__(self) -> str:
+        quant = ", quant=int8" if self.quantized else ""
         return (f"Program({self.spec.model}/{self.spec.role}, "
                 f"{len(self.spec.layers)} layers, "
-                f"{self.spec.summary()}, traces={self.traces})")
+                f"{self.spec.summary()}, dtype={self.spec.dtype}"
+                f"{quant}, traces={self.traces})")
 
 
 def build_bucket_programs(spec: ProgramSpec, buckets, *,
@@ -260,7 +307,7 @@ def build_bucket_programs(spec: ProgramSpec, buckets, *,
 
 def load_or_build(path, cfg, batch: int, role: str = "generator", *,
                   policy: DataflowPolicy | None = None, planner=None,
-                  measure: bool = False, dtype: str = "float32",
+                  measure: bool = False, dtype: str | None = None,
                   differentiable: bool = True,
                   mesh=_SPEC_UNSET) -> tuple[Program, bool]:
     """Load an exported program file, falling back to fresh resolution.
@@ -268,7 +315,9 @@ def load_or_build(path, cfg, batch: int, role: str = "generator", *,
     Returns ``(program, loaded)``.  ``loaded=False`` means the file was
     missing, corrupt, version-skewed, named unknown backends/stale
     blocks, or froze a different workload than ``cfg`` builds now
-    (topology / channel-scale / epilogue drift) — in every such case the
+    (topology / channel-scale / epilogue / storage-precision drift —
+    the requested ``dtype`` defaults to ``cfg.dtype``, so a file at
+    the wrong precision degrades too) — in every such case the
     program is rebuilt from ``cfg`` exactly as :meth:`Program.build`
     would, so a bad file degrades the optimization, never the service.
 

@@ -36,10 +36,13 @@ from repro.core.dataflow import (SHARDINGS, DataflowPolicy, Epilogue,
 __all__ = ["LayerExec", "ProgramSpec", "PROGRAM_FORMAT_VERSION",
            "SUPPORTED_PROGRAM_VERSIONS", "ROLES"]
 
-# Version 2 added the mesh/sharding fields; version-1 documents (no
-# mesh) still load with single-device defaults — see ``from_json``.
-PROGRAM_FORMAT_VERSION = 2
-SUPPORTED_PROGRAM_VERSIONS = (1, 2)
+# Version 2 added the mesh/sharding fields; version 3 added the
+# optional embedded int8 weight payload (``quantized_params``, written
+# by :func:`repro.quant.weights.quantize_program`).  Older documents
+# still load: v1 defaults to single-device, v1/v2 to float32 storage
+# with no quantized payload — see ``from_json``.
+PROGRAM_FORMAT_VERSION = 3
+SUPPORTED_PROGRAM_VERSIONS = (1, 2, 3)
 
 ROLES = ("generator", "discriminator")
 
@@ -209,6 +212,17 @@ class ProgramSpec:
     single-device where there aren't.  It is provenance-like but
     executable, so it is excluded from :meth:`geometry_signature`: a
     meshed program still serves the same workload.
+
+    ``dtype`` is the **storage** precision (one of
+    :data:`repro.quant.SUPPORTED_STORAGE_DTYPES`; accumulation is
+    always f32 — see :mod:`repro.quant`).  Unlike the mesh it *is*
+    part of the geometry signature: a bf16 program computes a
+    different function than the f32 one, so a file at the wrong
+    precision must not serve a config.  ``quantized_params`` is the
+    optional embedded int8 weight payload of an exported quantized
+    program (the v3 JSON form; see
+    :func:`repro.quant.weights.quantize_program`) — ``None`` for
+    ordinary specs, whose params live with the caller.
     """
 
     model: str
@@ -221,11 +235,16 @@ class ProgramSpec:
     requested_backend: str | None
     layers: tuple[LayerExec, ...]
     mesh: tuple[int, int] | None = None
+    quantized_params: dict | None = None
 
     def __post_init__(self):
+        from repro.quant.precision import canonical_dtype
         if self.role not in ROLES:
             raise ValueError(f"unknown program role {self.role!r}; "
                              f"one of {ROLES}")
+        # canonicalize ("bf16" → "bfloat16") and reject non-storage
+        # dtypes before they leak into plan keys or serialized files
+        object.__setattr__(self, "dtype", canonical_dtype(self.dtype))
         if not self.layers:
             raise ValueError("a program needs at least one layer")
         if self.mesh is not None:
@@ -234,6 +253,12 @@ class ProgramSpec:
                            for v in self.mesh)):
                 raise ValueError(f"mesh must be two positive ints "
                                  f"(data, model), got {self.mesh!r}")
+        if self.quantized_params is not None:
+            # hard-validates scheme/records/payload sizes — a corrupt
+            # quantized file must raise at load (where loaders degrade
+            # to fresh resolution), never at first trace
+            from repro.quant.weights import validate_quantized
+            validate_quantized(self.quantized_params)
         model_dim = self.mesh[1] if self.mesh else 1
         for le in self.layers:
             if le.sharding == "cout":
@@ -250,7 +275,7 @@ class ProgramSpec:
     @classmethod
     def build(cls, cfg, batch: int, role: str = "generator", *,
               policy: DataflowPolicy | None = None, planner=None,
-              measure: bool = False, dtype: str = "float32",
+              measure: bool = False, dtype: str | None = None,
               mesh=_UNSET, cout_shard_min_bytes: int | None = None
               ) -> "ProgramSpec":
         """Walk ``cfg``'s layers once and freeze every resolution.
@@ -260,6 +285,12 @@ class ProgramSpec:
         (``planner`` or the process-wide one); ``measure=True``
         additionally tunes plan misses — the ahead-of-time analogue of
         the old per-call warmup, and the only place measurement belongs.
+
+        ``dtype`` is the storage precision (default: ``cfg.dtype``,
+        float32 for configs without the field).  It enters every
+        layer's plan key — each precision is its own tuning workload —
+        and the sharding footprint heuristic (half-width weights clear
+        the Cout threshold half as often).
 
         ``mesh`` freezes a ``(data, model)`` device layout into the
         spec (default: ``cfg.mesh``; pass ``None`` explicitly to force
@@ -271,10 +302,13 @@ class ProgramSpec:
         """
         from repro.models.gan import (discriminator_epilogues,
                                       generator_epilogues)
+        from repro.quant.precision import canonical_dtype
         if role not in ROLES:
             raise ValueError(f"unknown program role {role!r}; "
                              f"one of {ROLES}")
         policy = policy or cfg.policy
+        dtype = canonical_dtype(
+            getattr(cfg, "dtype", "float32") if dtype is None else dtype)
         if mesh is _UNSET:
             mesh = getattr(cfg, "mesh", None)
         if mesh is not None:
@@ -331,9 +365,14 @@ class ProgramSpec:
 
     def geometry_signature(self) -> tuple:
         """The whole network's workload identity: a loaded spec whose
-        signature differs from a freshly built one is stale (topology or
-        scaling drift) and must not serve."""
-        return (self.model, self.role, self.z_dim, tuple(
+        signature differs from a freshly built one is stale (topology,
+        scaling, or **storage-precision** drift) and must not serve.
+        The storage dtype is part of the identity — a bf16 program
+        computes a different function than the f32 one — while the
+        mesh and the quantized payload are not (they change where/how
+        the same function runs, not what it computes... up to the
+        checked-in quantization tolerance)."""
+        return (self.model, self.role, self.z_dim, self.dtype, tuple(
             le.geometry_signature() for le in self.layers))
 
     def summary(self) -> str:
@@ -355,8 +394,9 @@ class ProgramSpec:
         frozen layer record."""
         mesh = "" if self.mesh is None else \
             f"mesh={self.mesh[0]}x{self.mesh[1]}  "
+        quant = "" if self.quantized_params is None else "quant=int8  "
         head = (f"program {self.model}/{self.role}  "
-                f"batch={self.batch}  dtype={self.dtype}  "
+                f"batch={self.batch}  dtype={self.dtype}  {quant}"
                 f"platform={self.platform}  {mesh}"
                 f"policy={self.requested_backend or 'heuristic'}  "
                 f"({len(self.layers)} layers)")
@@ -365,7 +405,7 @@ class ProgramSpec:
 
     # -- persistence --------------------------------------------------------
     def to_json(self) -> dict:
-        return {
+        doc = {
             "version": PROGRAM_FORMAT_VERSION,
             "model": self.model, "role": self.role, "batch": self.batch,
             "z_dim": self.z_dim, "channel_scale": self.channel_scale,
@@ -374,6 +414,9 @@ class ProgramSpec:
             "layers": [le.to_json() for le in self.layers],
             "mesh": list(self.mesh) if self.mesh else None,
         }
+        if self.quantized_params is not None:
+            doc["quantized_params"] = self.quantized_params
+        return doc
 
     @classmethod
     def from_json(cls, doc: dict) -> "ProgramSpec":
@@ -389,23 +432,27 @@ class ProgramSpec:
         if not isinstance(layers, list) or not layers:
             raise ValueError("program doc has no 'layers' list")
         # version-gated defaults: v1 documents predate the mesh fields
-        # and mean a single-device program
+        # and mean a single-device program; v1/v2 predate the storage-
+        # precision and quantization fields and mean plain float32
         mesh = doc.get("mesh") if version >= 2 else None
         if mesh is not None:
             if not isinstance(mesh, (list, tuple)) or len(mesh) != 2:
                 raise ValueError(f"program mesh must be [data, model], "
                                  f"got {mesh!r}")
             mesh = (int(mesh[0]), int(mesh[1]))
+        dtype = str(doc.get("dtype", "float32")) if version >= 3 \
+            else "float32"
+        quantized = doc.get("quantized_params") if version >= 3 else None
         z_dim = doc.get("z_dim")
         return cls(model=str(doc["model"]), role=str(doc["role"]),
                    batch=int(doc["batch"]),
                    z_dim=None if z_dim is None else int(z_dim),
                    channel_scale=float(doc.get("channel_scale", 1.0)),
-                   dtype=str(doc.get("dtype", "float32")),
+                   dtype=dtype,
                    platform=str(doc.get("platform", "cpu")),
                    requested_backend=doc.get("requested_backend"),
                    layers=tuple(LayerExec.from_json(d) for d in layers),
-                   mesh=mesh)
+                   mesh=mesh, quantized_params=quantized)
 
     def save(self, path) -> None:
         """Atomically write the spec's JSON document to ``path``."""

@@ -1,0 +1,36 @@
+"""repro.quant — mixed-precision storage and int8 weight quantization.
+
+The precision subsystem has three parts, each a module here:
+
+* :mod:`repro.quant.precision` — the :class:`Precision` spec: which
+  dtype activations and weights are *stored* in (``float32`` /
+  ``bfloat16`` / ``float16``), with accumulation **always** float32.
+  Programs carry the storage dtype (``GanConfig.dtype`` →
+  ``ProgramSpec.dtype``); the kernels' f32 VMEM scratch and the
+  pure-JAX backends' ``preferred_element_type=float32`` make every
+  backend compute the same function regardless of storage precision.
+* :mod:`repro.quant.weights` — per-channel symmetric int8 weight
+  quantization as a **program-export transform**:
+  :func:`quantize_program` embeds int8 tensors + f32 scales into a
+  version-3 program JSON; :class:`repro.program.Program` dequantizes
+  them into the storage dtype at load, so a planner-less serving
+  process pays int8 disk/transfer cost with zero measurements.
+* :mod:`repro.quant.tolerance` — checked-in per-Table-I-model output
+  tolerance gates (bf16/f16/int8 vs the f32 reference), enforced by
+  ``tests/test_quant.py`` so precision loss is validated, not vibes.
+"""
+
+from repro.quant.precision import (SUPPORTED_STORAGE_DTYPES, Precision,
+                                   canonical_dtype, storage_dtype,
+                                   storage_itemsize)
+from repro.quant.tolerance import model_tolerance, op_tolerance
+from repro.quant.weights import (dequantize_params, dequantize_weight,
+                                 quantize_params, quantize_program,
+                                 quantize_weight)
+
+__all__ = [
+    "SUPPORTED_STORAGE_DTYPES", "Precision", "canonical_dtype",
+    "storage_dtype", "storage_itemsize", "model_tolerance",
+    "op_tolerance", "dequantize_params", "dequantize_weight",
+    "quantize_params", "quantize_program", "quantize_weight",
+]

@@ -1,0 +1,108 @@
+"""The storage-precision spec threaded through program resolution.
+
+A precision names **one** thing: the dtype activations and weights are
+*stored* in between layers (``float32`` / ``bfloat16`` / ``float16``).
+It deliberately does not name an accumulator dtype — accumulation is
+always float32, everywhere:
+
+* the Pallas kernels (``kernels/ganax_conv.py``) accumulate tap
+  contributions in an f32 VMEM scratch whatever the x/w block dtype,
+  apply the fused epilogue to the f32 accumulator, and cast **once** at
+  the flush store;
+* the pure-JAX backends (``core/tconv.py`` / ``kernels/ref.py``)
+  contract with ``preferred_element_type=float32`` and cast the result
+  back to the input dtype, and :meth:`repro.core.dataflow.Epilogue
+  .apply` runs the bias/activation math in f32 before casting back —
+  so every backend computes the same function at every storage
+  precision, and the f32 path is bit-identical to the pre-precision
+  code.
+
+int8 is *not* a storage dtype: int8 weights are a serialization format
+(:mod:`repro.quant.weights`), dequantized into one of these storage
+dtypes at program load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SUPPORTED_STORAGE_DTYPES", "Precision", "canonical_dtype",
+           "storage_dtype", "storage_itemsize"]
+
+SUPPORTED_STORAGE_DTYPES = ("float32", "bfloat16", "float16")
+
+# Accepted spellings → canonical names.  Kept explicit (rather than
+# np.dtype parsing) so an unsupported-but-parseable dtype like
+# "float64" fails loudly instead of leaking into plan keys.
+_ALIASES = {
+    "float32": "float32", "f32": "float32", "fp32": "float32",
+    "bfloat16": "bfloat16", "bf16": "bfloat16",
+    "float16": "float16", "f16": "float16", "fp16": "float16",
+    "half": "float16",
+}
+
+_JNP = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+        "float16": jnp.float16}
+
+
+def canonical_dtype(dtype) -> str:
+    """Canonical storage-dtype name of ``dtype`` (a name, alias, numpy
+    dtype, or jax scalar type); raises ``ValueError`` for anything that
+    is not a supported storage dtype."""
+    if isinstance(dtype, str):
+        name = dtype.strip().lower()
+    else:
+        name = np.dtype(dtype).name
+    canon = _ALIASES.get(name)
+    if canon is None:
+        raise ValueError(
+            f"unsupported storage dtype {dtype!r}; one of "
+            f"{SUPPORTED_STORAGE_DTYPES} (aliases f32/bf16/f16)")
+    return canon
+
+
+def storage_dtype(dtype) -> np.dtype:
+    """The concrete numpy dtype object of a storage-dtype name."""
+    return jnp.dtype(_JNP[canonical_dtype(dtype)])
+
+
+def storage_itemsize(dtype) -> int:
+    """Bytes per element at storage precision — what byte accounting
+    (HBM-traffic rows, sharding footprints) must use instead of a
+    hardcoded 4."""
+    return storage_dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Hashable precision spec: storage dtype + the (fixed) f32
+    accumulator.  ``Precision("bf16")`` canonicalizes on construction,
+    so two spellings of the same precision compare and hash equal."""
+
+    storage: str = "float32"
+
+    def __post_init__(self):
+        object.__setattr__(self, "storage",
+                           canonical_dtype(self.storage))
+
+    @property
+    def storage_dtype(self) -> np.dtype:
+        return storage_dtype(self.storage)
+
+    @property
+    def accum_dtype(self) -> np.dtype:
+        return jnp.dtype(jnp.float32)
+
+    @property
+    def itemsize(self) -> int:
+        return self.storage_dtype.itemsize
+
+    @property
+    def is_f32(self) -> bool:
+        return self.storage == "float32"
+
+    def describe(self) -> str:
+        return f"{self.storage} storage / float32 accumulate"

@@ -43,6 +43,7 @@ throughput/latency, construct a :class:`~repro.serve.gan_engine
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 
@@ -71,11 +72,23 @@ class GanServer:
     def __init__(self, cfg: GanConfig, g_params, batch_size: int = 8,
                  policy: DataflowPolicy | None = None, seed: int = 0,
                  warm_plans: bool = True,
-                 program: Program | None = None, mesh=_MESH_UNSET):
+                 program: Program | None = None, mesh=_MESH_UNSET,
+                 dtype: str | None = None):
         if int(batch_size) <= 0:
             raise ValueError(f"batch_size must be positive, "
                              f"got {batch_size}")
+        if dtype is not None:
+            # serving-time storage-precision override (canonicalized by
+            # GanConfig; accumulation stays f32 — see repro.quant)
+            cfg = dataclasses.replace(cfg, dtype=dtype)
         self.cfg = cfg
+        if g_params is None:
+            # int8-deploy flow: a quantized program carries its own
+            # (dequantized-at-load) parameters
+            if program is None or not program.quantized:
+                raise ValueError("g_params=None needs a quantized "
+                                 "program= (int8 export) to serve")
+            g_params = program.params
         self.params = g_params
         self.batch_size = int(batch_size)
         self.policy = policy or cfg.policy
@@ -101,6 +114,11 @@ class GanServer:
             if program.spec.role != "generator":
                 raise ValueError(f"GanServer needs a generator program, "
                                  f"got role={program.spec.role!r}")
+            if dtype is None and program.spec.dtype != cfg.dtype:
+                # adopt the exported program's storage precision unless
+                # the caller pinned one explicitly
+                cfg = dataclasses.replace(cfg, dtype=program.spec.dtype)
+                self.cfg = cfg
             # a mismatched program file must fail here with a clear
             # error, not as a shape mismatch inside the first trace
             # (the heuristic-policy walk below touches no planner)
@@ -112,8 +130,8 @@ class GanServer:
                 raise ValueError(
                     f"program {program.spec.model!r} froze a different "
                     f"workload than config {cfg.name!r} builds "
-                    f"(topology / z_dim / channel-scale / epilogue "
-                    f"drift)")
+                    f"(topology / z_dim / channel-scale / epilogue / "
+                    f"precision drift)")
             self.program = program
         else:
             # measure=warm_plans: an auto policy tunes every layer plan

@@ -59,6 +59,7 @@ completion happen on different threads).  See ``docs/serving.md``.
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import threading
 import time
@@ -199,6 +200,13 @@ class GanEngine:
         Advanced (used by the ``GanServer`` façade): start the RNG
         stream from an existing key instead of ``seed``, and seed the
         remainder buffer with already-generated samples.
+    ``dtype``
+        Storage-precision override ("float32"/"bfloat16"/"float16",
+        aliases accepted): replaces ``cfg.dtype`` before the program
+        build.  When serving an exported ``program=`` without an
+        explicit override, the engine adopts the program's precision.
+        Pass ``g_params=None`` with a quantized (int8-exported)
+        program to serve its embedded weights.
     """
 
     def __init__(self, cfg: GanConfig, g_params,
@@ -207,7 +215,19 @@ class GanEngine:
                  warm_plans: bool = True, program: Program | None = None,
                  pipeline_depth: int = 1, max_pending: int | None = None,
                  warmup: bool = True, key=None,
-                 spare: np.ndarray | None = None, mesh=_MESH_UNSET):
+                 spare: np.ndarray | None = None, mesh=_MESH_UNSET,
+                 dtype: str | None = None):
+        if dtype is not None:
+            # serving-time storage-precision override (canonicalized by
+            # GanConfig; accumulation stays f32 — see repro.quant)
+            cfg = dataclasses.replace(cfg, dtype=dtype)
+        if g_params is None:
+            # int8-deploy flow: a quantized program carries its own
+            # (dequantized-at-load) parameters
+            if program is None or not program.quantized:
+                raise ValueError("g_params=None needs a quantized "
+                                 "program= (int8 export) to serve")
+            g_params = program.params
         self.cfg = cfg
         self.params = g_params
         self.buckets = tuple(sorted({int(b) for b in buckets}))
@@ -230,6 +250,11 @@ class GanEngine:
             if program.spec.role != "generator":
                 raise ValueError(f"GanEngine needs a generator program, "
                                  f"got role={program.spec.role!r}")
+            if dtype is None and program.spec.dtype != cfg.dtype:
+                # adopt the exported program's storage precision unless
+                # the caller pinned one explicitly
+                cfg = dataclasses.replace(cfg, dtype=program.spec.dtype)
+                self.cfg = cfg
             expected = ProgramSpec.build(cfg, self.buckets[-1],
                                          "generator",
                                          policy=DataflowPolicy())
@@ -238,8 +263,8 @@ class GanEngine:
                 raise ValueError(
                     f"program {program.spec.model!r} froze a different "
                     f"workload than config {cfg.name!r} builds "
-                    f"(topology / z_dim / channel-scale / epilogue "
-                    f"drift)")
+                    f"(topology / z_dim / channel-scale / epilogue / "
+                    f"precision drift)")
             spec = program.spec
         else:
             spec = ProgramSpec.build(cfg, self.buckets[-1], "generator",

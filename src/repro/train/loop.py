@@ -60,7 +60,15 @@ def make_gan_train_step(cfg, batch: int, *, g_lr: float = 2e-4,
     .param_shardings` trees — for placing the initial state and for
     :class:`TrainLoop`'s checkpoint-restore ``state_shardings``.
     Degrades with the programs: too few local devices → a plain
-    single-device step."""
+    single-device step.
+
+    **Mixed precision** (``cfg.dtype="bfloat16"``/``"float16"``): the
+    programs cast activations and weights to the storage dtype *at
+    use* and accumulate in f32 (see ``repro.quant``), so parameters,
+    optimizer state, and gradients stay f32 end to end — the
+    ``state_shardings`` f32 shape-structs and checkpoints need no
+    change, and the step stays numerically stable at low storage
+    precision."""
     from repro.models.gan import bce_with_logits
     from repro.program import Program
 

@@ -104,6 +104,12 @@ def _pallas_geometry(key: PlanKey
 
 def _vmem_bytes(key: PlanKey, q_sizes: tuple[int, ...], taps: int,
                 padded: tuple[int, ...], blocks: tuple[int, ...]) -> int:
+    # Precision audit (repro.quant): x/w/out VMEM blocks scale with the
+    # *storage* itemsize carried in the plan key's dtype (2 B at
+    # bf16/f16), while the accumulator scratch and the fused-epilogue
+    # bias block are hardwired ``* 4`` — deliberately: the kernel
+    # accumulates in f32 at every storage precision, so those two terms
+    # never shrink with the storage dtype.
     lead, (bci, bco) = blocks[:-2], blocks[-2:]
     itemsize = jax.numpy.dtype(key.dtype).itemsize
     rows = int(np.prod(lead)) * q_sizes[-1]
